@@ -1,0 +1,39 @@
+"""Fig. 2.10 — energy efficiency of the 16 operations.
+
+SIMDRAM energy = activation-count model (TRA = 1.44× ACT, Sec. 2.6.2);
+CPU baseline energy = measured time × a nominal 10 pJ/op/lane CPU envelope
+(relative numbers are what the figure reports)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_16, op_cost
+from .common import emit
+
+CPU_PJ_PER_ELEM = 600.0      # ~60W / 100 GOps class envelope
+
+
+def run() -> list[str]:
+    lines = []
+    ratios = []
+    amb = []
+    for op in PAPER_16:
+        cost = op_cost(op, 32)
+        acost = op_cost(op, 32, "ambit")
+        sd_pj = cost.energy_nj * 1e3 / cost.lanes       # pJ per element
+        ratio = CPU_PJ_PER_ELEM / sd_pj
+        ratios.append(ratio)
+        amb.append(acost.energy_nj / cost.energy_nj)
+        lines.append(emit(f"fig2.10/{op}", 0.0,
+                          f"sd_pj_per_elem={sd_pj:.2f} vs_cpu={ratio:.1f}x "
+                          f"vs_ambit={acost.energy_nj/cost.energy_nj:.2f}x"))
+    lines.append(emit("fig2.10/geomean_vs_cpu", 0.0,
+                      f"{float(np.exp(np.mean(np.log(ratios)))):.1f}x "
+                      f"(paper: 257x vs CPU)"))
+    lines.append(emit("fig2.10/mean_vs_ambit", 0.0,
+                      f"{np.mean(amb):.2f}x (paper: 2.6x)"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Beyond-paper: bit-plane (vertical-layout) quantized weights in LM decode.
+
+Decode is weight-bandwidth-bound (§Roofline); SIMDRAM's vertical layout cuts
+HBM bytes per weight.  This bench reports (1) functional accuracy of the
+QuantizedLinear path on a real layer, (2) weight-byte ratios, and (3) the
+memory-roofline delta read from the dry-run artifacts when the q8 decode
+variant has been generated (§Perf hillclimb)."""
+from __future__ import annotations
+
+import glob
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import QuantizedLinear
+from .common import RESULTS, emit
+
+
+def run() -> list[str]:
+    lines = []
+    rng = np.random.default_rng(0)
+    d, ff = 512, 1024
+    w = rng.standard_normal((d, ff)).astype(np.float32) * 0.05
+    x = rng.standard_normal((8, d)).astype(np.float32)
+    for n_bits in (8, 4):
+        ql = QuantizedLinear.from_dense(jnp.asarray(w), n_bits=n_bits)
+        y = np.asarray(ql(jnp.asarray(x)))
+        ref = x @ w
+        rel = float(np.abs(y - ref).max() / np.abs(ref).max())
+        ratio = (d * ff * 2) / ql.hbm_bytes
+        lines.append(emit(
+            f"lm_serving/qlinear_int{n_bits}", 0.0,
+            f"rel_err={rel:.4f} hbm_bytes_vs_bf16={ratio:.2f}x_fewer"))
+    # roofline delta (baseline vs quantized decode cells)
+    for base in glob.glob(str(RESULTS / "dryrun" / "*decode_32k_single.json")):
+        qf = base.replace("_single.json", "_single_q8.json")
+        try:
+            b = json.load(open(base))
+            q = json.load(open(qf))
+        except FileNotFoundError:
+            continue
+        if not (b.get("ok") and q.get("ok")) or b.get("skipped"):
+            continue
+        mb = b["roofline"]["memory_s"]
+        mq = q["roofline"]["memory_s"]
+        lines.append(emit(
+            f"lm_serving/{b['arch']}_decode_mem_term", 0.0,
+            f"baseline={mb:.4f}s q8={mq:.4f}s ({mb/max(mq,1e-12):.2f}x)"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

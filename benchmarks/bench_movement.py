@@ -1,0 +1,43 @@
+"""Fig. 2.13 — worst-case in-DRAM operand-movement overhead.
+
+When an operation's inputs live in another subarray/bank, rows must be
+moved first: intra-bank via LISA (inter-linked subarrays), inter-bank via
+RowClone PSM over the internal bus.  Overhead = move latency / op latency,
+per op × element width — the paper reports 0.39% / 17.5% averages.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_16, OPS, op_cost
+from .common import emit
+
+LISA_ROW_NS = 90.0            # LISA row-buffer-movement per row
+PSM_ROW_NS = 230.0            # RowClone PSM: 8 kB row over the internal bus
+
+
+def run() -> list[str]:
+    lines = []
+    intra_all, inter_all = [], []
+    for op in PAPER_16:
+        spec = OPS[op]
+        for n in (8, 16, 32, 64):
+            cost = op_cost(op, n)
+            # Fig 2.13 moves the operation's OUTPUT to another subarray/bank
+            rows_moved = spec.out_bits(n)
+            intra = rows_moved * LISA_ROW_NS / cost.latency_ns * 100
+            inter = rows_moved * PSM_ROW_NS / cost.latency_ns * 100
+            intra_all.append(intra)
+            inter_all.append(inter)
+            if n == 32:
+                lines.append(emit(
+                    f"fig2.13/{op}:n{n}", 0.0,
+                    f"intra={intra:.2f}% inter={inter:.1f}%"))
+    lines.append(emit("fig2.13/avg", 0.0,
+                      f"intra={np.mean(intra_all):.2f}% (paper 0.39%) "
+                      f"inter={np.mean(inter_all):.1f}% (paper 17.5%)"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Deliverable (g) — roofline table from the dry-run artifacts.
+
+Reads benchmarks/results/dryrun/*.json, prints the per-(arch × shape × mesh)
+three-term roofline, dominant bottleneck, MODEL_FLOPS ratio, and memory fit,
+and writes results/roofline.md (consumed by EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import RESULTS, emit
+
+HBM_PER_CHIP = 16e9          # v5e
+
+
+def load_cells(pattern: str = "*.json"):
+    cells = []
+    for f in sorted(glob.glob(str(RESULTS / "dryrun" / pattern))):
+        r = json.load(open(f))
+        if r.get("ok") and not r.get("skipped"):
+            cells.append(r)
+    return cells
+
+
+def row(r: dict) -> dict:
+    rl = r["roofline"]
+    step = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+    fit = r["bytes_per_device_live"] <= HBM_PER_CHIP
+    return {
+        "cell": f"{r['arch']}×{r['shape']}×{r['mesh']}"
+                + ("×q8" if r.get("quantized") else ""),
+        "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+        "collective_s": rl["collective_s"],
+        "bottleneck": rl["bottleneck"],
+        "step_s": step,
+        "roofline_frac": rl["compute_s"] / step if step else 0.0,
+        "useful_ratio": r.get("useful_flops_ratio") or 0.0,
+        "mem_gb": r["bytes_per_device_live"] / 1e9,
+        "fits": fit,
+    }
+
+
+def run() -> list[str]:
+    cells = load_cells()
+    lines = []
+    if not cells:
+        lines.append(emit("roofline/none", 0.0, "no dry-run artifacts"))
+        return lines
+    md = ["| cell | compute_s | memory_s | collective_s | bottleneck | "
+          "roofline_frac | useful_ratio | mem GB/chip | fits |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    worst = None
+    for r in cells:
+        d = row(r)
+        md.append(
+            f"| {d['cell']} | {d['compute_s']:.4f} | {d['memory_s']:.4f} "
+            f"| {d['collective_s']:.4f} | {d['bottleneck']} "
+            f"| {d['roofline_frac']:.3f} | {d['useful_ratio']:.2f} "
+            f"| {d['mem_gb']:.2f} | {'Y' if d['fits'] else 'N'} |")
+        # "worst fraction" only meaningful for non-trivial cells
+        if d["step_s"] > 5e-3 and (
+                worst is None or d["roofline_frac"] < worst["roofline_frac"]):
+            worst = d
+    (RESULTS / "roofline.md").write_text("\n".join(md) + "\n")
+    n_fit = sum(1 for r in cells if row(r)["fits"])
+    lines.append(emit("roofline/cells", 0.0,
+                      f"{len(cells)} compiled cells; {n_fit} fit 16GB/chip"))
+    lines.append(emit("roofline/worst_fraction", 0.0,
+                      f"{worst['cell']} frac={worst['roofline_frac']:.3f} "
+                      f"bottleneck={worst['bottleneck']}"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

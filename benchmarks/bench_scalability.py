@@ -1,0 +1,36 @@
+"""Appendix C / Table C.1 — scalability of the evaluated operations.
+
+Command-sequence counts for every operation as a function of element width
+n, with the fitted growth exponent (log-log slope) — the paper's
+linear/log/quadratic classification, derived from our *generated*
+μPrograms rather than stated."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import OPS, PAPER_16, get_uprogram
+from .common import emit
+
+WIDTHS = (8, 16, 32, 64)
+
+
+def run() -> list[str]:
+    lines = []
+    for op in PAPER_16:
+        counts = []
+        for n in WIDTHS:
+            counts.append(get_uprogram(op, n).command_count()["total"])
+        slope = np.polyfit(np.log(WIDTHS), np.log(counts), 1)[0]
+        cls = ("constant" if slope < 0.3 else
+               "linear" if slope < 1.4 else
+               "quadratic" if slope > 1.6 else "superlinear")
+        expected = OPS[op].scaling
+        lines.append(emit(
+            f"tabC.1/{op}", 0.0,
+            f"cmds(8..64)={counts} slope={slope:.2f} class={cls} "
+            f"(declared {expected})"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Fig. 2.9 — throughput of the 16 operations: SIMDRAM:{1,4,16} (DRAM
+command-count model) vs Ambit-equivalent (same model, AND/OR/NOT command
+streams) vs a *measured* CPU baseline (jnp int ops, this host).
+
+SIMDRAM throughput per bank = 65536 lanes / μProgram latency; banks scale
+linearly (bank-level parallelism, Sec. 2.5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OPS, PAPER_16, op_cost
+from .common import emit, time_fn
+
+N_ELEMS = 1 << 20
+
+_CPU_FNS = {
+    "add": lambda a, b: a + b, "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a // jnp.maximum(b, 1),
+    "gt": lambda a, b: a > b, "ge": lambda a, b: a >= b,
+    "eq": lambda a, b: a == b,
+    "max": jnp.maximum, "min": jnp.minimum,
+    "relu": lambda a: jnp.maximum(a, 0), "abs": jnp.abs,
+    "bitcount": lambda a: jax.lax.population_count(a),
+    "and_red": lambda a: a == -1, "or_red": lambda a: a != 0,
+    "xor_red": lambda a: jax.lax.population_count(a) & 1,
+    "if_else": lambda s, a, b: jnp.where(s == 1, a, b),
+}
+
+
+def run(n_bits: int = 32, quick: bool = True) -> list[str]:
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-2**30, 2**30, N_ELEMS), jnp.int32)
+    b = jnp.asarray(rng.integers(1, 2**30, N_ELEMS), jnp.int32)
+    s = jnp.asarray(rng.integers(0, 2, N_ELEMS), jnp.int32)
+    lines = []
+    ratios = {1: [], 4: [], 16: []}
+    amb = []
+    for op in PAPER_16:
+        spec = OPS[op]
+        fn = jax.jit(_CPU_FNS[op])
+        args = [s, a, b][3 - spec.n_inputs:] if spec.n_inputs < 3 \
+            else [s, a, b]
+        sec = time_fn(fn, *args)
+        cpu_gops = N_ELEMS / sec / 1e9
+        cost = op_cost(op, n_bits)
+        acost = op_cost(op, n_bits, "ambit")
+        for banks in (1, 4, 16):
+            sd_gops = cost.throughput_gops * banks
+            ratios[banks].append(sd_gops / cpu_gops)
+        amb.append(acost.latency_ns / cost.latency_ns)
+        lines.append(emit(
+            f"fig2.9/{op}", sec * 1e6,
+            f"cpu={cpu_gops:.2f}GOps sd1={cost.throughput_gops:.2f} "
+            f"sd16={cost.throughput_gops*16:.2f} vs_ambit="
+            f"{acost.latency_ns/cost.latency_ns:.2f}x"))
+    for banks in (1, 4, 16):
+        g = float(np.exp(np.mean(np.log(ratios[banks]))))
+        lines.append(emit(f"fig2.9/geomean_vs_cpu_x{banks}banks", 0.0,
+                          f"{g:.2f}x (paper: 5.5x/22x/88x vs their CPU)"))
+    lines.append(emit("fig2.9/mean_vs_ambit", 0.0,
+                      f"{np.mean(amb):.2f}x (paper: 2.0x)"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 2.14 — data-transposition overhead.
+
+The transposition unit converts one 64 B cache line per cycle; a vertically
+laid out n-bit object slice spans n cache lines.  Worst case: all input data
+starts horizontal in the cache.  Overhead = transposition latency / op
+latency.  Also times our Pallas transposition kernel (interpret mode) as a
+functional throughput check.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PAPER_16, OPS, op_cost
+from repro.core.subarray import ROW_BITS
+from repro.kernels import to_bitplanes
+from .common import emit, time_fn
+
+CYCLE_NS = 0.25               # 4 GHz transposition unit
+LINE_BITS = 512               # 64B cache line = 512 lanes' worth of one bit
+
+
+def run() -> list[str]:
+    lines = []
+    overheads = []
+    for op in PAPER_16:
+        spec = OPS[op]
+        for n in (8, 64):
+            if spec.scaling == "quadratic" and n > 16:
+                continue
+            cost = op_cost(op, n)
+            # one row segment: 65536 lanes → 128 slices/row, n lines each
+            n_lines = (ROW_BITS // LINE_BITS) * n * spec.n_inputs
+            t_ns = n_lines * CYCLE_NS
+            ov = t_ns / (t_ns + cost.latency_ns) * 100
+            overheads.append(ov)
+            if n == 8:
+                lines.append(emit(f"fig2.14/{op}:n8", 0.0,
+                                  f"overhead={ov:.1f}%"))
+    lines.append(emit("fig2.14/avg", 0.0,
+                      f"{np.mean(overheads):.1f}% (paper: 7.1% avg for "
+                      f"SIMDRAM:1, up to 38.9% for 8-bit reductions)"))
+    x = jnp.asarray(np.random.default_rng(0).integers(-128, 128, 1 << 16),
+                    jnp.int32)
+    sec = time_fn(lambda v: to_bitplanes(v, 8, block_words=256).planes, x)
+    lines.append(emit("fig2.14/pallas_pack_64k_int8", sec * 1e6,
+                      f"{(1 << 16) / sec / 1e6:.1f} Melem/s interpret-mode"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Figs. 3.9/3.10 — data-hotness-aware mapping in heterogeneous memory
+(PCM–DRAM and TL-DRAM), VBI property-bit-driven placement vs unaware."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.vbi.hetero import PCM_DRAM, TL_DRAM, speedup
+from .common import emit
+
+
+def run() -> list[str]:
+    lines = []
+    for system, paper in ((PCM_DRAM, 1.33), (TL_DRAM, 1.21)):
+        sp = [speedup(system, seed=s)["runtime_speedup"] for s in range(5)]
+        lines.append(emit(
+            f"fig3.9-10/{system.name}", 0.0,
+            f"runtime speedup {np.mean(sp):.2f}x ± {np.std(sp):.2f} "
+            f"(paper: {paper}x)"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+RESULTS = Path(__file__).parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+
+def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call (jax arrays blocked)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line)
+    return line

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+Each prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2.9]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    from . import (bench_energy, bench_kernels, bench_lm_serving,
+                   bench_movement, bench_reliability, bench_roofline,
+                   bench_scalability, bench_throughput, bench_transpose,
+                   bench_vbi_hetero, bench_vbi_translation)
+    benches = {
+        "fig2.9": bench_throughput, "fig2.10": bench_energy,
+        "fig2.11": bench_kernels, "fig2.13": bench_movement,
+        "fig2.14": bench_transpose, "tab2.3": bench_reliability,
+        "tabC.1": bench_scalability,
+        "fig3.6": bench_vbi_translation, "fig3.9": bench_vbi_hetero,
+        "roofline": bench_roofline, "lm_serving": bench_lm_serving,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for key, mod in benches.items():
+        if args.only and args.only not in key:
+            continue
+        try:
+            mod.run()
+        except Exception:                        # noqa: BLE001
+            failed.append(key)
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""VBI-paged serving demo: batched decoding with continuous admission,
+delayed page allocation, and size-class promotion — the MTL managing the KV
+address space (DESIGN.md §2).
+
+    PYTHONPATH=src python examples/serve_paged.py --requests 6 --max-new 16
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main                   # noqa: E402
+
+if __name__ == "__main__":
+    main()

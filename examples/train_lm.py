@@ -1,0 +1,89 @@
+"""End-to-end training driver: train a small LM for a few hundred steps on
+synthetic data with the full production stack (AdamW, checkpointing, resume,
+straggler monitor, metrics log).
+
+Default is a ~10M-parameter qwen3-family model sized for this CPU container
+(~2 s/step); ``--params 100`` scales to the ~100M-class configuration used
+on real hardware (same code path).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                            # noqa: E402
+import numpy as np                                    # noqa: E402
+
+from repro.checkpoint import CheckpointManager        # noqa: E402
+from repro.data.pipeline import SyntheticLMData       # noqa: E402
+from repro.models.config import ModelConfig           # noqa: E402
+from repro.optim.adamw import AdamWConfig             # noqa: E402
+from repro.train.loop import TrainLoop                # noqa: E402
+from repro.train.step import (init_train_state,       # noqa: E402
+                              make_train_step)
+
+
+def config_for(params_m: int) -> ModelConfig:
+    if params_m >= 100:
+        return ModelConfig(name="lm100m", family="dense", n_layers=12,
+                           d_model=640, n_heads=10, n_kv=5, head_dim=64,
+                           d_ff=1708, vocab=32768, qk_norm=True,
+                           tie_embeddings=True, remat=False)
+    return ModelConfig(name="lm10m", family="dense", n_layers=6,
+                       d_model=256, n_heads=8, n_kv=4, head_dim=32,
+                       d_ff=683, vocab=8192, qk_norm=True,
+                       tie_embeddings=True, remat=False)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--params", type=int, default=10, choices=[10, 100])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = config_for(args.params)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=args.steps // 10)
+    from repro.models.config import ModelConfig as _MC  # quiet linters
+    _ = _MC
+    data = SyntheticLMData(cfg, args.batch, args.seq, seed=0)
+    ckpt = CheckpointManager(args.ckpt_dir)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+
+    def batch_fn(i):
+        return {k: jax.numpy.asarray(v) for k, v in data.batch_at(i).items()}
+
+    restored, start = ckpt.restore_latest(state)
+    if restored is not None:
+        state = restored
+        print(f"[train_lm] resumed from step {start}")
+    else:
+        start = 0
+    loop = TrainLoop(step, batch_fn, ckpt, ckpt_every=100,
+                     log_path=args.ckpt_dir + "/metrics.jsonl")
+    t0 = time.time()
+    state, end, losses = loop.run(state, start, args.steps)
+    dt = time.time() - t0
+    n = max(end - start, 1)
+    print(f"[train_lm] {n} steps in {dt:.0f}s ({dt/n:.2f} s/step)")
+    k = max(len(losses) // 10, 1)
+    curve = [round(float(np.mean(losses[i:i+k])), 3)
+             for i in range(0, len(losses), k)]
+    print(f"[train_lm] loss curve (bucketed): {curve}")
+    assert losses[-1] < losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

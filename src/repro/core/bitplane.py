@@ -1,0 +1,129 @@
+"""Vertical (bit-plane) data layout — SIMDRAM's first key technique.
+
+A DRAM row in SIMDRAM holds bit *i* of every element; each bitline is a SIMD
+lane.  On TPU we pack 32 lanes into one uint32 word, so a bit-plane is a
+``uint32[n_words]`` vector and a full vertical object is
+``uint32[n_bits, n_words]``.  ``MAJ``/``NOT`` on packed words are the VPU
+analogue of a row-wide triple-row activation.
+
+Planes are LSB-first: ``planes[i]`` holds bit ``i`` (bit 0 = LSB).
+Signed values use two's complement; the sign bit is plane ``n_bits-1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+_WORD_WEIGHTS = (1 << np.arange(WORD_BITS)).astype(np.uint32)
+
+
+def n_words_for(n_elems: int) -> int:
+    return (n_elems + WORD_BITS - 1) // WORD_BITS
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitPlaneArray:
+    """A vertically-laid-out integer array (the SIMDRAM data object)."""
+
+    planes: jax.Array          # uint32[n_bits, n_words]
+    n_elems: int               # number of valid lanes
+    signed: bool = True
+
+    @property
+    def n_bits(self) -> int:
+        return self.planes.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self.planes.shape[1]
+
+    def tree_flatten(self):
+        return (self.planes,), (self.n_elems, self.signed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+
+@partial(jax.jit, static_argnames=("n_bits", "signed"))
+def pack(x: jax.Array, n_bits: int, signed: bool = True) -> BitPlaneArray:
+    """Horizontal → vertical transposition (the transposition unit, jnp oracle).
+
+    ``x``: integer array of shape (n_elems,).  Values are truncated to
+    ``n_bits`` (two's complement wraparound), exactly as a fixed-width DRAM
+    object would store them.
+    """
+    n_elems = x.shape[0]
+    nw = n_words_for(n_elems)
+    xu = jnp.asarray(x).astype(jnp.uint32)
+    pad = nw * WORD_BITS - n_elems
+    xu = jnp.pad(xu, (0, pad))
+    lanes = xu.reshape(nw, WORD_BITS)                      # [nw, 32]
+    bits = jnp.arange(n_bits, dtype=jnp.uint32)
+    # [n_bits, nw, 32] -> bit i of each lane
+    b = (lanes[None] >> bits[:, None, None]) & jnp.uint32(1)
+    planes = (b * jnp.asarray(_WORD_WEIGHTS)[None, None, :]).sum(
+        axis=-1, dtype=jnp.uint32
+    )
+    return BitPlaneArray(planes, n_elems, signed)
+
+
+@partial(jax.jit, static_argnames=("out_dtype",))
+def unpack(bp: BitPlaneArray, out_dtype=jnp.int32) -> jax.Array:
+    """Vertical → horizontal transposition with sign extension."""
+    n_bits, nw = bp.planes.shape
+    lanes = (
+        (bp.planes[:, :, None] >> jnp.asarray(np.arange(WORD_BITS, dtype=np.uint32)))
+        & jnp.uint32(1)
+    )                                                      # [n_bits, nw, 32]
+    lanes = lanes.reshape(n_bits, nw * WORD_BITS)
+    weights = (jnp.uint64(1) << jnp.arange(n_bits, dtype=jnp.uint64))
+    val = (lanes.astype(jnp.uint64) * weights[:, None]).sum(axis=0)
+    if bp.signed and n_bits < 64:
+        sign = lanes[n_bits - 1].astype(jnp.uint64)
+        val = val - (sign << jnp.uint64(n_bits))
+    out = val.astype(jnp.int64)[: bp.n_elems]
+    return out.astype(out_dtype)
+
+
+def pack_np(x: np.ndarray, n_bits: int, signed: bool = True) -> BitPlaneArray:
+    """NumPy pack (host-side helper for tests/benchmarks)."""
+    x = np.asarray(x, dtype=np.int64)
+    n_elems = x.shape[0]
+    nw = n_words_for(n_elems)
+    xu = np.zeros(nw * WORD_BITS, np.uint64)
+    xu[:n_elems] = x.astype(np.uint64)
+    lanes = xu.reshape(nw, WORD_BITS)
+    planes = np.zeros((n_bits, nw), np.uint32)
+    for i in range(n_bits):
+        bits = ((lanes >> np.uint64(i)) & np.uint64(1)).astype(np.uint32)
+        planes[i] = (bits * _WORD_WEIGHTS).sum(axis=-1, dtype=np.uint32)
+    return BitPlaneArray(jnp.asarray(planes), n_elems, signed)
+
+
+def unpack_np(bp: BitPlaneArray) -> np.ndarray:
+    """Exact 64-bit-safe host-side unpack (sign-extended int64)."""
+    planes = np.asarray(jax.device_get(bp.planes))
+    n_bits, nw = planes.shape
+    lanes = np.zeros((n_bits, nw * WORD_BITS), np.uint64)
+    for k in range(WORD_BITS):
+        lanes[:, k::WORD_BITS] = (planes >> np.uint32(k)) & np.uint32(1)
+    val = np.zeros(nw * WORD_BITS, np.uint64)
+    for i in range(n_bits):
+        val |= lanes[i] << np.uint64(i)
+    out = val.astype(np.int64)
+    if bp.signed and n_bits < 64:
+        sign = (lanes[n_bits - 1] != 0)
+        out = np.where(sign, out.astype(np.int64) - (np.int64(1) << np.int64(n_bits)), out)
+    return out[: bp.n_elems]
+
+
+def maj3(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Packed-word majority — the TRA analogue.  MAJ(a,b,c)=ab+ac+bc."""
+    return (a & b) | (a & c) | (b & c)

@@ -1,0 +1,25 @@
+"""The Virtual Block Interface (VBI) — the thesis' Contribution #2.
+
+A data-aware alternative virtual memory framework: a global address space of
+size-classed Virtual Blocks, OS-owned protection (CVT), and a hardware
+Memory Translation Layer (MTL) that owns physical allocation and
+VBI→physical translation with per-VB flexible translation structures,
+delayed allocation, and early reservation.
+
+``kvcache`` is the TPU adaptation: the MTL managing a paged KV cache for LM
+serving (delayed page allocation on first append, size-class promotion,
+data-aware placement).
+"""
+from .address_space import (SIZE_CLASSES, VBProps, VBInfo, decode_vbi_addr,
+                            encode_vbi_addr, make_vbuid, size_class_for,
+                            split_vbuid)
+from .cvt import Client, ClientVBTable, CVTCache, PermissionError_, RWX
+from .mtl import MTL, PhysicalMemory
+from .kvcache import PagedKVManager, PagedKVState
+
+__all__ = [
+    "SIZE_CLASSES", "VBProps", "VBInfo", "encode_vbi_addr", "decode_vbi_addr",
+    "make_vbuid", "split_vbuid", "size_class_for", "Client", "ClientVBTable",
+    "CVTCache", "RWX", "PermissionError_", "MTL", "PhysicalMemory",
+    "PagedKVManager", "PagedKVState",
+]

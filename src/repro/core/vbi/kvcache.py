@@ -1,0 +1,196 @@
+"""VBI-paged KV cache — the TPU adaptation of the MTL (DESIGN.md §2).
+
+Each sequence's KV stream is a Virtual Block: enabled on admission, grown by
+``promote_vb`` through power-of-4 page-count size classes, backed *lazily* —
+a physical page is allocated only when the first token lands in it (the
+paper's delayed allocation: first dirty writeback), and translated through a
+page table that lives on device and is resolved inside the attention kernel
+(hardware-owned translation, invisible to the host "OS").
+
+Host side (this class) = the MTL: free-list, size classes, promotion,
+eviction.  Device side = pure functional JAX on a page pool:
+
+    k_pages, v_pages : [n_layers, n_pages, page_size, n_kv, head_dim]
+    page_table       : [max_seqs, max_pages_per_seq] int32
+    seq_lens         : [max_seqs] int32
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .address_space import VBProps
+from .mtl import MTL, PhysicalMemory
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVState:
+    k_pages: jax.Array
+    v_pages: jax.Array
+    page_table: jax.Array
+    seq_lens: jax.Array
+
+    def tree_flatten(self):
+        return (self.k_pages, self.v_pages, self.page_table, self.seq_lens), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def append_kv(state: PagedKVState, seq_idx: jax.Array, k: jax.Array,
+              v: jax.Array) -> PagedKVState:
+    """Write one token's K/V (shape [n_layers, n_kv, head_dim]) for sequence
+    ``seq_idx`` at its current length; bumps seq_lens."""
+    pos = state.seq_lens[seq_idx]
+    page_size = state.k_pages.shape[2]
+    page = state.page_table[seq_idx, pos // page_size]
+    slot = pos % page_size
+    k_pages = state.k_pages.at[:, page, slot].set(k)
+    v_pages = state.v_pages.at[:, page, slot].set(v)
+    return PagedKVState(k_pages, v_pages, state.page_table,
+                        state.seq_lens.at[seq_idx].add(1))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_layer_kv(state: PagedKVState, seq_idx: jax.Array,
+                    layer: jax.Array, k: jax.Array, v: jax.Array
+                    ) -> PagedKVState:
+    pos = state.seq_lens[seq_idx] - 1
+    ps = state.k_pages.shape[2]
+    page = state.page_table[seq_idx, pos // ps]
+    slot = pos % ps
+    return PagedKVState(
+        state.k_pages.at[layer, page, slot].set(k),
+        state.v_pages.at[layer, page, slot].set(v),
+        state.page_table, state.seq_lens)
+
+
+@partial(jax.jit, static_argnames=("max_pages",))
+def gather_kv(state: PagedKVState, seq_idx: jax.Array, layer: jax.Array,
+              max_pages: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Materialize one sequence's K/V for one layer:
+    returns (k, v, valid_mask) with shape [max_pages*page_size, n_kv, hd]."""
+    pages = state.page_table[seq_idx, :max_pages]                 # [P]
+    k = state.k_pages[layer][pages]                               # [P,ps,kv,hd]
+    v = state.v_pages[layer][pages]
+    ps = state.page_size
+    P = max_pages
+    k = k.reshape(P * ps, *k.shape[2:])
+    v = v.reshape(P * ps, *v.shape[2:])
+    mask = jnp.arange(P * ps) < state.seq_lens[seq_idx]
+    return k, v, mask
+
+
+class PagedKVManager:
+    """The MTL for the KV address space (host-side policy)."""
+
+    SIZE_CLASS_PAGES = (1, 4, 16, 64, 256, 1024)
+
+    def __init__(self, n_layers: int, n_pages: int, page_size: int,
+                 n_kv: int, head_dim: int, max_seqs: int,
+                 dtype=jnp.bfloat16, mtl: Optional[MTL] = None):
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_seqs = max_seqs
+        self.max_pages_per_seq = self.SIZE_CLASS_PAGES[-1]
+        self.free_pages: List[int] = list(range(1, n_pages))  # page 0 = null
+        self.seq_class = np.full(max_seqs, -1, np.int32)      # size-class idx
+        self.seq_pages: List[List[int]] = [[] for _ in range(max_seqs)]
+        self.seq_vbid = np.full(max_seqs, -1, np.int64)
+        self.mtl = mtl or MTL(PhysicalMemory(1 << 12))
+        self.stats = {"promotions": 0, "delayed_page_allocs": 0,
+                      "released_pages": 0}
+        self.state = PagedKVState(
+            k_pages=jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                              dtype),
+            v_pages=jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                              dtype),
+            page_table=jnp.zeros((max_seqs, self.max_pages_per_seq),
+                                 jnp.int32),
+            seq_lens=jnp.zeros((max_seqs,), jnp.int32),
+        )
+
+    # -- VB lifecycle --------------------------------------------------------
+    def new_seq(self, seq_idx: int) -> None:
+        assert self.seq_class[seq_idx] == -1, "slot busy"
+        self.seq_class[seq_idx] = 0
+        # each sequence's KV stream is a VB (smallest class); enabling it
+        # allocates NOTHING — backing pages arrive on first append.
+        self.seq_vbid[seq_idx] = self.mtl.enable_vb(0, VBProps.KV_CACHE)
+        self.state = PagedKVState(
+            self.state.k_pages, self.state.v_pages,
+            self.state.page_table.at[seq_idx].set(0),
+            self.state.seq_lens.at[seq_idx].set(0))
+
+    def release_seq(self, seq_idx: int) -> None:
+        for p in self.seq_pages[seq_idx]:
+            self.free_pages.append(p)
+            self.stats["released_pages"] += 1
+        self.seq_pages[seq_idx] = []
+        self.seq_class[seq_idx] = -1
+        self.mtl.disable_vb(0, int(self.seq_vbid[seq_idx]))
+        self.seq_vbid[seq_idx] = -1
+
+    def _capacity_pages(self, seq_idx: int) -> int:
+        return self.SIZE_CLASS_PAGES[self.seq_class[seq_idx]]
+
+    def ensure_capacity(self, seq_idx: int, new_len: int) -> None:
+        """Delayed allocation + promotion before appending a token."""
+        need_pages = -(-new_len // self.page_size)
+        while need_pages > self._capacity_pages(seq_idx):
+            self.seq_class[seq_idx] += 1                # promote_vb
+            self.stats["promotions"] += 1
+        have = len(self.seq_pages[seq_idx])
+        while have < need_pages:
+            assert self.free_pages, "KV pool exhausted (evict first)"
+            page = self.free_pages.pop()
+            self.state = PagedKVState(
+                self.state.k_pages, self.state.v_pages,
+                self.state.page_table.at[seq_idx, have].set(page),
+                self.state.seq_lens)
+            self.seq_pages[seq_idx].append(page)
+            self.stats["delayed_page_allocs"] += 1
+            have += 1
+
+    # -- the serving fast path -------------------------------------------------
+    def append(self, seq_idx: int, k: jax.Array, v: jax.Array) -> None:
+        cur = int(self.state.seq_lens[seq_idx])
+        self.ensure_capacity(seq_idx, cur + 1)
+        self.state = append_kv(self.state, jnp.int32(seq_idx), k, v)
+
+    def begin_token(self, seq_idx: int) -> int:
+        """Reserve the next position (delayed page allocation happens here);
+        returns the position.  Layer K/V are then filled with
+        ``write_layer`` as the forward pass produces them."""
+        cur = int(self.state.seq_lens[seq_idx])
+        self.ensure_capacity(seq_idx, cur + 1)
+        self.state = PagedKVState(
+            self.state.k_pages, self.state.v_pages, self.state.page_table,
+            self.state.seq_lens.at[seq_idx].add(1))
+        return cur
+
+    def write_layer(self, seq_idx: int, layer: int, k: jax.Array,
+                    v: jax.Array) -> None:
+        """k/v: [n_kv, head_dim] for the position reserved by begin_token."""
+        self.state = _write_layer_kv(self.state, jnp.int32(seq_idx),
+                                     jnp.int32(layer), k, v)
+
+    def gather(self, seq_idx: int, layer: int, max_pages: Optional[int] = None):
+        mp = max_pages or self._capacity_pages(seq_idx)
+        return gather_kv(self.state, jnp.int32(seq_idx), jnp.int32(layer), mp)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - 1 - len(self.free_pages)

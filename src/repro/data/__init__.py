@@ -1,0 +1,3 @@
+from .pipeline import MemmapTokenDataset, SyntheticLMData, make_batch_fn
+
+__all__ = ["SyntheticLMData", "MemmapTokenDataset", "make_batch_fn"]

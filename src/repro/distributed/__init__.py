@@ -1,0 +1,5 @@
+from .sharding import (batch_axes_for, batch_spec, cache_specs, param_specs,
+                       placement_hint, shardings_of, state_specs)
+
+__all__ = ["param_specs", "state_specs", "batch_spec", "cache_specs",
+           "batch_axes_for", "placement_hint", "shardings_of"]

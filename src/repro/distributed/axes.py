@@ -1,0 +1,68 @@
+"""Logical activation-sharding axes.
+
+GSPMD propagation alone makes poor choices across ``lax.scan`` boundaries
+(we measured attention replicated over the whole `model` axis — 16×
+redundant FLOPs/memory), so the model inserts explicit
+``with_sharding_constraint``s through this indirection layer.
+
+Tokens: 'batch' → the data-parallel axes of the active mesh ('pod','data');
+'model' → tensor-parallel axis; 'expert' → 'model' when EP is active;
+'seq' → sequence sharding for long-context decode.  Outside a
+``logical_axes(mesh)`` scope (unit tests, single-device examples) every
+constraint is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_AXES: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "logical_axes", default=None)
+
+
+@contextlib.contextmanager
+def logical_axes(mesh: Mesh, n_experts: int = 0, seq_shard: bool = False):
+    names = set(mesh.axis_names)
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    mapping = {
+        "batch": batch if len(batch) > 1 else (batch[0] if batch else None),
+        "model": "model" if "model" in names else None,
+        "expert": ("model" if ("model" in names and n_experts
+                               and n_experts % mesh.shape["model"] == 0)
+                   else None),
+        "seq": (("data", "model") if seq_shard and "data" in names
+                else ("model" if "model" in names else None)),
+    }
+    tok = _AXES.set({"mesh": mesh, "map": mapping})
+    try:
+        yield
+    finally:
+        _AXES.reset(tok)
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint; no-op outside logical_axes()."""
+    ctx = _AXES.get()
+    if ctx is None:
+        return x
+    mapping = ctx["map"]
+    mesh = ctx["mesh"]
+    spec = []
+    for i, d in enumerate(dims):
+        ax = mapping.get(d) if d else None
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if x.shape[i] % n == 0 and x.shape[i] > 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,135 @@
+"""Roofline-term extraction from compiled HLO (deliverable g).
+
+``cost_analysis`` supplies FLOPs and bytes-accessed; collective traffic is
+NOT in cost_analysis, so we parse the (SPMD-partitioned, hence per-device)
+HLO text and sum the shapes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Byte accounting per op (ring algorithms, factor (n-1)/n ≈ 1 folded in):
+  all-reduce        2 × result bytes        (reduce-scatter + all-gather)
+  all-gather        1 × result bytes
+  reduce-scatter    1 × operand bytes (≈ result × n)
+  all-to-all        1 × result bytes
+  collective-permute 1 × result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (spec formula: chips × link_bw)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by op type (bytes)."""
+    out: Dict[str, float] = {"all-reduce": 0.0, "all-gather": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    counts: Dict[str, int] = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_shape, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue                       # count the -start only
+        rb = _shape_bytes(result_shape)
+        if op == "all-reduce":
+            out[op] += 2 * rb
+        elif op == "reduce-scatter":
+            # operand bytes: parse shapes inside the parens
+            args = line[m.end():]
+            ob = _shape_bytes(args)
+            out[op] += max(ob, rb)
+        else:
+            out[op] += rb
+        counts[op] += 1
+    out["total"] = sum(v for k, v in out.items())
+    out["counts"] = counts            # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float           # optimistic (TPU-fusion) byte count
+    coll_bytes_per_device: float
+    chips: int
+    bytes_per_device_max: float = 0.0  # pessimistic (every top-level HLO op)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def memory_s_max(self) -> float:
+        return self.bytes_per_device_max / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_s_max": self.memory_s_max,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "bytes_per_device_max": self.bytes_per_device_max,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+        }
+
+
+def roofline_from_compiled(compiled, mesh_devices: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(flops, byts, float(coll["total"]), mesh_devices)

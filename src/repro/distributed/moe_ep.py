@@ -1,0 +1,117 @@
+"""Expert-parallel MoE under shard_map (explicit all-to-all dispatch).
+
+GSPMD cannot shard the scatter/gather dispatch of a capacity MoE (it
+replicates the [E, cap, d] buffers — we measured 186 GB/device on
+qwen3-moe-235b), so the framework takes manual control:
+
+  * tokens are resharded over (pod, data, **model**) for the MoE block, so
+    every chip dispatches its own token slice;
+  * routing + capacity bookkeeping are purely local;
+  * ``lax.all_to_all`` over 'model' exchanges per-expert buffers (the
+    canonical EP dispatch/combine collectives);
+  * each chip runs only its E/n_model experts' FFNs;
+  * mixtral-style E < n_model falls back to tensor-parallel expert FFNs
+    (experts replicated, d_ff sharded, one psum);
+  * tiny token counts (batch-1 decode) fall back to model-replicated
+    dispatch — correct, negligibly redundant.
+
+Everything is differentiable (shard_map + all_to_all transpose), so the
+same path serves training and serving.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _local_dispatch(x_loc, router, K: int, E: int, cap: int):
+    """Local capacity dispatch: (buf [E,cap,d], combine indices)."""
+    T, d = x_loc.shape
+    logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    topw, topi = lax.top_k(probs, K)                    # [T, K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    eflat = topi.reshape(-1)
+    order = jnp.argsort(eflat)
+    e_sorted = eflat[order]
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E))
+    pos_in_e = jnp.arange(T * K) - seg_start[e_sorted]
+    keep = pos_in_e < cap
+    tok = order // K
+    slot = jnp.where(keep, pos_in_e, cap - 1)
+    vals = jnp.where(keep[:, None], x_loc[tok], 0).astype(x_loc.dtype)
+    buf = jnp.zeros((E, cap, d), x_loc.dtype).at[e_sorted, slot].add(vals)
+    w = (topw.reshape(-1)[order] * keep)
+    return buf, (e_sorted, slot, tok, w.astype(x_loc.dtype))
+
+
+def _local_combine(out_e, idx, T: int) -> jax.Array:
+    e_sorted, slot, tok, w = idx
+    gathered = out_e[e_sorted, slot]                    # [T*K, d]
+    return jnp.zeros((T, out_e.shape[-1]), out_e.dtype
+                     ).at[tok].add(gathered * w[:, None])
+
+
+def moe_ep(params, x, cfg, mesh: Mesh) -> jax.Array:
+    """x: [B, S, d] → [B, S, d], dispatched expert-parallel on ``mesh``.
+
+    The in_specs split B over the batch axes and (EP only) S over 'model'
+    directly — merging B·S on the host side would reshape a sharded dim
+    into an unsharded one, which GSPMD handles by replicating (measured as
+    ~6.5 TB/device of boundary all-reduces on qwen3-moe train_4k)."""
+    E, K = cfg.n_experts, cfg.top_k
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_b = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    n_m = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    B, S, d = x.shape
+    ep = E % n_m == 0 and n_m > 1
+    # TP fallback needs tokens *replicated* over 'model' (each peer holds a
+    # different d_ff slice of the same tokens); only EP splits tokens there.
+    tok_over_model = ep and S % n_m == 0
+    n_shards = n_b * (n_m if tok_over_model else 1)
+    T_loc = (B // n_b) * (S // (n_m if tok_over_model else 1))
+    cap = int(max(1, round(T_loc * K / E * cfg.capacity_factor)))
+
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    sspec = "model" if tok_over_model else None
+    _ = n_shards
+    if ep:
+        w_specs = (P(), P("model", None, None), P("model", None, None),
+                   P("model", None, None))
+    else:
+        w_specs = (P(), P(None, None, "model"), P(None, None, "model"),
+                   P(None, "model", None))
+
+    def local_fn(router, w1, w3, w2, x_loc):
+        x2 = x_loc.reshape(-1, d)                       # [T_loc, d]
+        buf, idx = _local_dispatch(x2, router, K, E, cap)
+        if ep:
+            e_loc = E // n_m
+            b = buf.reshape(n_m, e_loc, cap, d)
+            b = lax.all_to_all(b, "model", split_axis=0, concat_axis=0)
+            b = b.transpose(1, 0, 2, 3).reshape(e_loc, n_m * cap, d)
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", b, w1)) \
+                * jnp.einsum("ecd,edf->ecf", b, w3)
+            o = jnp.einsum("ecf,efd->ecd", h, w2)       # [e_loc, n_m*cap, d]
+            o = o.reshape(e_loc, n_m, cap, d).transpose(1, 0, 2, 3)
+            o = lax.all_to_all(o, "model", split_axis=0, concat_axis=0)
+            out_e = o.reshape(E, cap, d)
+        else:
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1)) \
+                * jnp.einsum("ecd,edf->ecf", buf, w3)
+            o = jnp.einsum("ecf,efd->ecd", h, w2)
+            out_e = lax.psum(o, "model") if n_m > 1 else o
+        y = _local_combine(out_e, idx, x2.shape[0])
+        return y.reshape(x_loc.shape)
+
+    in_specs = w_specs + (P(bspec, sspec, None),)
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=in_specs, out_specs=P(bspec, sspec, None),
+                   check_rep=False)
+    return fn(params["router"], params["w1"], params["w3"], params["w2"], x)

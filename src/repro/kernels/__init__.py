@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+All kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and
+are validated on CPU in interpret mode against their ref.py oracles:
+
+  * bitplane_transpose - the SIMDRAM transposition unit
+  * simdram_vm         - the control unit executing uPrograms on VMEM tiles
+  * bitserial_matmul   - weight bit-plane quantized matmul (MXU adaptation)
+  * paged_attention    - VBI-paged decode attention (translation in-kernel)
+"""
+from .bitplane_transpose import from_bitplanes, to_bitplanes
+from .bitserial_matmul import (QuantizedLinear, bitserial_matmul,
+                               quantize_activations, quantize_weights)
+from .paged_attention import paged_decode_attention
+from .simdram_vm import simdram_op
+
+__all__ = [
+    "to_bitplanes", "from_bitplanes", "simdram_op", "bitserial_matmul",
+    "quantize_weights", "quantize_activations", "QuantizedLinear",
+    "paged_decode_attention",
+]

@@ -1,0 +1,3 @@
+from .ops import from_bitplanes, to_bitplanes
+
+__all__ = ["to_bitplanes", "from_bitplanes"]

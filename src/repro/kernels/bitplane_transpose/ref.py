@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the transposition unit: core.bitplane pack/unpack."""
+from ...core.bitplane import pack as ref_pack           # noqa: F401
+from ...core.bitplane import unpack as ref_unpack       # noqa: F401

@@ -1,0 +1,4 @@
+from .ops import QuantizedLinear, bitserial_matmul, quantize_activations, quantize_weights
+
+__all__ = ["bitserial_matmul", "quantize_weights", "quantize_activations",
+           "QuantizedLinear"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the bit-serial matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_bsmm_raw(x: jax.Array, w_planes: jax.Array) -> jax.Array:
+    """Σ_b 2^b (x @ w_planes[b]) in int32."""
+    acc = jnp.zeros((x.shape[0], w_planes.shape[2]), jnp.int32)
+    for b in range(w_planes.shape[0]):
+        acc = acc + (jnp.dot(x.astype(jnp.int32),
+                             w_planes[b].astype(jnp.int32)) << b)
+    return acc
+
+
+def ref_quantized_matmul(x_i8, x_scale, w_q, w_scale, zero: int) -> jax.Array:
+    """Dequantized reference: (x_i8 @ w_q) * scales with unsigned-bias zero."""
+    acc = jnp.dot(x_i8.astype(jnp.int32), (w_q.astype(jnp.int32) + zero))
+    acc = acc - zero * x_i8.astype(jnp.int32).sum(axis=1, keepdims=True)
+    return acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]

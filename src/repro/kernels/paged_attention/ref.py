@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: gather pages then masked softmax attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_paged_attention(page_table, seq_len, q, k_pages, v_pages):
+    """Same signature as paged_attn_one_seq (single sequence)."""
+    max_pages = page_table.shape[0]
+    ps = k_pages.shape[1]
+    k = k_pages[page_table].reshape(max_pages * ps, *k_pages.shape[2:])
+    v = v_pages[page_table].reshape(max_pages * ps, *v_pages.shape[2:])
+    s = jnp.einsum("hgd,phd->hgp", q, k.astype(q.dtype))
+    mask = jnp.arange(max_pages * ps) < seq_len[0]
+    s = jnp.where(mask[None, None, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None, :], p, 0.0)
+    out = jnp.einsum("hgp,phd->hgd", p, v.astype(q.dtype))
+    return out / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)

@@ -1,0 +1,3 @@
+from .ops import simdram_op
+
+__all__ = ["simdram_op"]

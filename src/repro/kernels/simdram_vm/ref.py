@@ -1,0 +1,4 @@
+"""Oracle: the pure-JAX engine executor (`core.operations.apply_op`), itself
+validated element-wise against the numpy ORACLES."""
+from ...core.operations import apply_op as ref_apply_op  # noqa: F401
+from ...core.operations import ORACLES                   # noqa: F401

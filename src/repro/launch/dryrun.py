@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) cell and extract roofline terms.
+
+MUST be run as its own process (the two lines above must execute before any
+jax import anywhere).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh single --out benchmarks/results/dryrun
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Each cell writes an incremental JSON artifact; EXPERIMENTS.md §Dry-run and
+§Roofline are generated from these.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from ..configs import ARCH_IDS, get_config               # noqa: E402
+from ..distributed.axes import logical_axes              # noqa: E402
+from ..distributed.hlo_analysis import Roofline          # noqa: E402
+from ..distributed.hlo_cost import analyze_hlo           # noqa: E402
+from ..distributed.sharding import (batch_spec, cache_specs,  # noqa: E402
+                                    param_specs, shardings_of, state_specs)
+from ..models.config import ModelConfig                  # noqa: E402
+from ..optim.adamw import AdamWConfig                    # noqa: E402
+from ..serve.step import make_decode_step, make_prefill_step  # noqa: E402
+from ..train.step import make_train_step                 # noqa: E402
+from ..launch.mesh import make_production_mesh           # noqa: E402
+from ..launch.specs import (SHAPES, cell_skip_reason,    # noqa: E402
+                            input_specs, model_flops_estimate)
+from jax.sharding import PartitionSpec as P              # noqa: E402
+
+
+def _opt_cfg(cfg: ModelConfig) -> AdamWConfig:
+    # bf16 optimizer states for the 340B-class config (memory fit)
+    sdt = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+    return AdamWConfig(state_dtype=sdt)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               quantized: bool = False, overrides: dict = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if quantized:
+        cfg = dataclasses.replace(cfg, quantize_bits=8)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "quantized": quantized, "overrides": overrides or {},
+           "ok": False}
+    skip = cell_skip_reason(cfg, shape_name)
+    if skip:
+        rec.update(skipped=True, reason=skip, ok=True)
+        return rec
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    opt_cfg = _opt_cfg(cfg)
+    args = input_specs(cfg, shape_name, opt_cfg)
+    if quantized:
+        assert sh["kind"] != "train", "quantized path is serving-only"
+        from ..models.quantized import quantize_serving_params
+        args = (quantize_serving_params(args[0], abstract=True),) + args[1:]
+    t0 = time.time()
+    seq_shard = sh["kind"] == "decode" and sh["batch"] == 1
+    with mesh, logical_axes(mesh, n_experts=cfg.n_experts,
+                            seq_shard=seq_shard):
+        if sh["kind"] == "train":
+            fn = make_train_step(cfg, opt_cfg)
+            in_sh = (shardings_of(state_specs(cfg, args[0], mesh), mesh),
+                     shardings_of(batch_spec(cfg, args[1], mesh), mesh))
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0,))
+        elif sh["kind"] == "prefill":
+            fn = make_prefill_step(cfg, max_len=sh["seq"])
+            in_sh = (shardings_of(param_specs(cfg, args[0], mesh), mesh),
+                     shardings_of(batch_spec(cfg, args[1], mesh), mesh))
+            jitted = jax.jit(fn, in_shardings=in_sh)
+        else:
+            fn = make_decode_step(cfg)
+            in_sh = (shardings_of(param_specs(cfg, args[0], mesh), mesh),
+                     shardings_of(cache_specs(cfg, args[1], mesh,
+                                              sh["batch"]), mesh),
+                     shardings_of(batch_spec(cfg, args[2], mesh), mesh),
+                     shardings_of(P(), mesh))
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(1,))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_rec[attr] = int(v)
+    live = (mem_rec.get("argument_size_in_bytes", 0)
+            + mem_rec.get("output_size_in_bytes", 0)
+            + mem_rec.get("temp_size_in_bytes", 0)
+            - mem_rec.get("alias_size_in_bytes", 0))
+    # loop-aware HLO cost walk (hlo_cost.py): the per-device HLO text with
+    # while-loop trip counts multiplied in
+    res = analyze_hlo(compiled.as_text())
+    rl = Roofline(res["flops"], res["bytes_min"],
+                  res["collectives"]["total"], n_dev,
+                  bytes_per_device_max=res["bytes"])
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    mf = model_flops_estimate(cfg, shape_name)
+    hlo_flops_total = rl.flops_per_device * n_dev
+    rec.update(
+        ok=True, skipped=False, n_devices=n_dev,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=mem_rec, bytes_per_device_live=int(live),
+        roofline=rl.as_dict(),
+        collectives=res["collectives"],
+        collective_counts=res["collective_counts"],
+        xla_cost_analysis={"flops": float(ca.get("flops", 0.0)),
+                           "bytes": float(ca.get("bytes accessed", 0.0))},
+        model_flops=mf,
+        useful_flops_ratio=(mf / hlo_flops_total
+                            if hlo_flops_total else None),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quantized", action="store_true",
+                    help="int8 bit-plane weight path (beyond-paper perf)")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}" + \
+                    ("_q8" if args.quantized else "")
+                path = out / f"{tag}.json"
+                if path.exists():
+                    print(f"[skip] {tag} (artifact exists)")
+                    continue
+                print(f"[cell] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp,
+                                     quantized=args.quantized)
+                except Exception as e:            # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                path.write_text(json.dumps(rec, indent=1))
+                if rec.get("ok"):
+                    if rec.get("skipped"):
+                        print(f"   skipped: {rec['reason']}")
+                    else:
+                        r = rec["roofline"]
+                        print(f"   ok compile={rec['compile_s']}s "
+                              f"bottleneck={r['bottleneck']} "
+                              f"step={max(r['compute_s'], r['memory_s'], r['collective_s']):.4f}s "
+                              f"mem/dev={rec['bytes_per_device_live']/1e9:.2f}GB")
+                else:
+                    print(f"   FAIL {rec['error']}")
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh definitions (as functions — importing this module never
+touches jax device state).
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; only batch/grad traffic
+crosses the `pod` (DCN) axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (cpu) devices exist — tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))

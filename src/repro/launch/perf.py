@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: lower one cell with config overrides, report
+the roofline delta vs the baseline artifact, and record the iteration.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch nemotron-4-340b \
+        --shape train_4k --tag sp --set seq_parallel=true \
+        --hypothesis "SP converts TP all-reduces to AG/RS, halving bytes"
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+from ..configs import ARCH_IDS        # noqa: E402
+from ..launch.specs import SHAPES     # noqa: E402
+from .dryrun import lower_cell        # noqa: E402
+
+
+def _coerce(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _coerce(v)
+    rec = lower_cell(args.arch, args.shape, args.mesh == "multi",
+                     quantized=args.quantized, overrides=overrides)
+    rec["tag"] = args.tag
+    rec["hypothesis"] = args.hypothesis
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{args.arch}_{args.shape}_{args.mesh}_{args.tag}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    base_path = out / f"{args.arch}_{args.shape}_{args.mesh}.json"
+    if not rec.get("ok"):
+        print("FAIL:", rec.get("error"))
+        raise SystemExit(1)
+    r = rec["roofline"]
+    print(f"[{args.tag}] compute={r['compute_s']:.4f}s "
+          f"memory={r['memory_s']:.4f}s collective={r['collective_s']:.4f}s "
+          f"bottleneck={r['bottleneck']} "
+          f"mem/dev={rec['bytes_per_device_live']/1e9:.2f}GB "
+          f"compile={rec['compile_s']}s")
+    if base_path.exists():
+        b = json.loads(base_path.read_text())
+        if b.get("ok") and not b.get("skipped"):
+            br = b["roofline"]
+            for t in ("compute_s", "memory_s", "collective_s"):
+                ratio = br[t] / r[t] if r[t] else float("inf")
+                print(f"   {t}: {br[t]:.4f} -> {r[t]:.4f}  ({ratio:.2f}x)")
+            bstep = max(br["compute_s"], br["memory_s"], br["collective_s"])
+            step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            print(f"   step: {bstep:.4f} -> {step:.4f} ({bstep/step:.2f}x); "
+                  f"mem/dev {b['bytes_per_device_live']/1e9:.2f} -> "
+                  f"{rec['bytes_per_device_live']/1e9:.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Shared model layers: norms, RoPE, chunked (flash-style) attention, MLPs,
+and sort-based dropping MoE.
+
+All attention flows through :func:`attention`, which dispatches between a
+direct path (small S) and a memory-bounded chunked online-softmax path
+(prefill_32k / train_4k) so activation memory stays O(S·chunk) instead of
+O(S²) — required for the 32k/500k dry-run cells to fit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -2.0 ** 30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, D]; positions: [S] or broadcastable."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs    # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def _mask_bias(qpos, kpos, causal: bool, window: int) -> jax.Array:
+    """[Sq, Sk] additive bias."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def direct_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                     kv_valid: Optional[jax.Array] = None):
+    """q [B,Hkv,G,Sq,D], k/v [B,Hkv,Sk,D] → [B,Hkv,G,Sq,D]."""
+    B, H, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    s = s + _mask_bias(qpos, kpos, causal, window)[None, None, None]
+    if kv_valid is not None:
+        s = jnp.where(kv_valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      chunk_q=512, chunk_k=1024, p_bf16=False,
+                      causal_groups=0,
+                      kv_valid: Optional[jax.Array] = None):
+    """Flash-style two-level scan; O(Sq·chunk_k) live memory.
+
+    ``causal_groups=N`` splits the q axis into N groups, each scanning only
+    its causal KV prefix — skipping most fully-masked chunk pairs (the
+    compute/bytes halving a triangular kernel gets; §Perf D)."""
+    assert kv_valid is None, "kv_valid only supported on the direct path"
+    B, H, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    pad_q, pad_k = (-Sq) % cq, (-Sk) % ck
+    qp = jnp.pad(q, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    valid = jnp.arange(Sk + pad_k) < Sk
+    nq, nk = qp.shape[3] // cq, kp.shape[2] // ck
+    qs = jnp.moveaxis(qp.reshape(B, H, G, nq, cq, D), 3, 0)
+    ks = jnp.moveaxis(kp.reshape(B, H, nk, ck, D), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(B, H, nk, ck, D), 2, 0)
+    vals = valid.reshape(nk, ck)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    def make_q_step(nk_bound):
+      def q_step(_, qi_chunk):
+        qi, qc = qi_chunk
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+        qc = qc.astype(jnp.float32) * scale
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, kc, vc, val = kv
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc.astype(jnp.float32))
+            bias = _mask_bias(qpos, kpos, causal, window)
+            s = s + bias[None, None, None]
+            s = jnp.where(val[None, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            if p_bf16:   # §Perf: halve the softmax-weight bytes into the MXU
+                pv = jnp.einsum("bhgqk,bhkd->bhgqd",
+                                p.astype(jnp.bfloat16),
+                                vc.astype(jnp.bfloat16)).astype(jnp.float32)
+            else:
+                pv = jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                vc.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, H, G, cq), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, G, cq), jnp.float32),
+                jnp.zeros((B, H, G, cq, D), jnp.float32))
+        (m, l, acc), _ = lax.scan(
+            kv_step, init, (jnp.arange(nk_bound), ks[:nk_bound],
+                            vs[:nk_bound], vals[:nk_bound]))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+      # NOTE: a fresh closure per KV bound — lax.scan caches jaxprs on
+      # function identity, so reusing one function across bounds would
+      # silently reuse the first bound's truncated KV slice.
+      return q_step
+
+    if causal and causal_groups > 1 and not window and q_offset == 0:
+        # triangular scheduling: q group g only scans its causal KV prefix
+        ngr = min(causal_groups, nq)
+        per = -(-nq // ngr)
+        outs_groups = []
+        for g in range(ngr):
+            q_lo, q_hi = g * per, min((g + 1) * per, nq)
+            if q_lo >= q_hi:
+                break
+            nk_bound = min(nk, -(-(q_hi * cq) // ck))
+            _, o = lax.scan(make_q_step(nk_bound), None,
+                            (jnp.arange(q_lo, q_hi), qs[q_lo:q_hi]))
+            outs_groups.append(o)
+        outs = jnp.concatenate(outs_groups, axis=0)
+    else:
+        _, outs = lax.scan(make_q_step(nk), None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, H, G, nq * cq, D)
+    return out[:, :, :, :Sq]
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              chunk_q=512, chunk_k=1024, p_bf16=False, causal_groups=0,
+              kv_valid=None):
+    """Dispatch: q [B,Hq,Sq,D] (Hq = Hkv·G), k/v [B,Hkv,Sk,D]."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    qg = q.reshape(B, Hkv, Hq // Hkv, Sq, D)
+    if Sq * Sk <= 512 * 2048 or Sq == 1:
+        out = direct_attention(qg, k, v, causal=causal, window=window,
+                               q_offset=q_offset, kv_valid=kv_valid)
+    else:
+        out = chunked_attention(qg, k, v, causal=causal, window=window,
+                                q_offset=q_offset, chunk_q=chunk_q,
+                                chunk_k=chunk_k, p_bf16=p_bf16,
+                                causal_groups=causal_groups,
+                                kv_valid=kv_valid)
+    return out.reshape(B, Hq, Sq, D)
+
+
+# --------------------------------------------------------------------------
+# channel mixers
+# --------------------------------------------------------------------------
+def mlp(params, x, act: str):
+    from ..distributed.axes import constrain
+    from .quantized import qmm
+    if act == "swiglu":
+        h = jax.nn.silu(qmm(x, params["w1"])) * qmm(x, params["w3"])
+    elif act == "sq_relu":                    # nemotron squared ReLU
+        h = jnp.square(jax.nn.relu(qmm(x, params["w1"])))
+    else:                                     # gelu (whisper)
+        h = jax.nn.gelu(qmm(x, params["w1"]), approximate=True)
+    h = constrain(h, "batch", None, "model")
+    return qmm(h, params["w2"])
+
+
+def _moe_groups(T: int, want: int = 32) -> int:
+    g = min(want, T)
+    while T % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe(params, x, cfg):
+    """Top-k capacity MoE on x [B, S, d].  Under an active mesh
+    (logical_axes context) the expert-parallel shard_map path is used
+    (distributed/moe_ep.py); without a mesh, the local grouped path."""
+    from ..distributed.axes import _AXES
+    ctx = _AXES.get()
+    B, S, d = x.shape
+    if ctx is not None and "model" in ctx["mesh"].axis_names:
+        import numpy as np
+        mesh = ctx["mesh"]
+        baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        n_b = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+        if B % n_b == 0:
+            from ..distributed.moe_ep import moe_ep
+            if cfg.moe_legacy_dispatch:
+                # old path: merge B·S on the host side (sharded-dim reshape
+                # → GSPMD boundary replication; §Perf A1 baseline)
+                n_m = mesh.shape.get("model", 1)
+                ep = cfg.n_experts % n_m == 0 and n_m > 1
+                s_div = n_m if (ep and S % n_m == 0) else 1
+                xm = x.reshape(n_b * s_div, (B // n_b) * (S // s_div), d)
+                y = moe_ep(params, xm, cfg, mesh)
+                return y.reshape(B, S, d)
+            return moe_ep(params, x, cfg, mesh)
+        # tiny token counts (batch-1 decode): local path is negligible
+    return _moe_local(params, x.reshape(B * S, d), cfg).reshape(B, S, d)
+
+
+def _moe_local(params, x, cfg):
+    """Grouped sort-based top-k MoE with per-group capacity (DESIGN.md §3).
+
+    x: [T, d] → [T, d].  Tokens are split into G groups aligned with the
+    batch sharding, so argsort/position bookkeeping is *local* to a shard;
+    the only cross-device traffic is the dispatch/combine of the [G, E,
+    cap, d] buffers between the batch axes and the expert-parallel 'model'
+    axis (the EP all-to-all).  Expert FFNs are batched einsums, so HLO
+    FLOPs ≈ true active-expert FLOPs."""
+    from ..distributed.axes import constrain
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = _moe_groups(T, cfg.moe_groups)
+    Tg = T // G
+    cap = int(max(1, round(Tg * K / E * cfg.capacity_factor)))
+    xg = constrain(x.reshape(G, Tg, d), "batch", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    topw, topi = lax.top_k(probs, K)                    # [G, Tg, K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    eflat = topi.reshape(G, Tg * K)
+    order = jnp.argsort(eflat, axis=1)                  # local per group
+    e_sorted = jnp.take_along_axis(eflat, order, axis=1)
+    seg_start = jax.vmap(jnp.searchsorted)(
+        e_sorted, jnp.broadcast_to(jnp.arange(E), (G, E)))  # [G, E]
+    pos_in_e = jnp.arange(Tg * K)[None] - jnp.take_along_axis(
+        seg_start, e_sorted, axis=1)
+    keep = pos_in_e < cap
+    tok = order // K                                    # [G, Tg*K]
+    slot = jnp.where(keep, pos_in_e, cap - 1)
+    gidx = jnp.arange(G)[:, None]
+    vals = jnp.where(keep[..., None],
+                     jnp.take_along_axis(xg, tok[..., None], axis=1), 0
+                     ).astype(x.dtype)
+    buf = jnp.zeros((G, E, cap, d), x.dtype)
+    buf = buf.at[gidx, e_sorted, slot].add(vals)
+    buf = constrain(buf, "batch", "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w1"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, params["w3"])
+    h = constrain(h, "batch", "expert", None, None)
+    out_e = jnp.einsum("gecf,efd->gecd", h, params["w2"])
+    out_e = constrain(out_e, "batch", "expert", None, None)
+    gathered = out_e[gidx, e_sorted, slot]              # [G, Tg*K, d]
+    w = (jnp.take_along_axis(topw.reshape(G, Tg * K), order, axis=1)
+         * keep).astype(x.dtype)
+    yg = jnp.zeros((G, Tg, d), x.dtype)
+    yg = yg.at[gidx, tok].add(gathered * w[..., None])
+    return yg.reshape(T, d)

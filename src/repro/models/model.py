@@ -1,0 +1,503 @@
+"""Composable stage-scanned decoder (+ optional encoder) for all 10 archs.
+
+Three entry points, all pure functions of (params, batch):
+
+  * ``forward_train``  — full causal LM forward (scan over stages, remat).
+  * ``prefill``        — forward + emit KV/recurrent caches (serving).
+  * ``decode_step``    — one token with caches (the decode_* dry-run cells).
+
+Caches are pytrees mirroring the stage structure (stacked over the scan
+axis), so the same ``lax.scan`` machinery that keeps the HLO compact for 94
+layers also threads cache state.  Sliding-window / local-attention layers
+keep ring-buffer caches of size ``window`` — this is what makes mixtral /
+gemma3 / recurrentgemma `long_500k`-capable while nemotron et al. are not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed.axes import constrain
+from .config import LayerSpec, ModelConfig, Stage
+from .layers import attention, mlp, moe, rms_norm, rope
+from .quantized import qmm
+from .rglru import init_rglru_params, rglru_decode_step, rglru_forward
+from .ssm import init_mamba_params, mamba_decode_step, mamba_forward, ssm_dims
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+def _init_attn(cfg: ModelConfig, key, dtype, cross: bool = False) -> Dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, KV * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, KV * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H * hd, d)) * (H * hd) ** -0.5
+               ).astype(dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _init_mlp(cfg: ModelConfig, key, dtype) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": (jax.random.normal(ks[0], (d, ff)) * d ** -0.5).astype(dtype),
+         "w2": (jax.random.normal(ks[1], (ff, d)) * ff ** -0.5).astype(dtype)}
+    if cfg.act == "swiglu":
+        p["w3"] = (jax.random.normal(ks[2], (d, ff)) * d ** -0.5).astype(dtype)
+    return p
+
+
+def _init_moe(cfg: ModelConfig, key, dtype) -> Dict:
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": (jax.random.normal(ks[0], (d, E)) * d ** -0.5
+                   ).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (E, d, ff)) * d ** -0.5).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (E, d, ff)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (E, ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def _init_layer(spec: LayerSpec, cfg: ModelConfig, key, dtype,
+                with_cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if spec.kind in ("attn", "local"):
+        p["attn"] = _init_attn(cfg, ks[0], dtype)
+    elif spec.kind == "mamba":
+        p["mamba"] = init_mamba_params(cfg, ks[0], dtype)
+    elif spec.kind == "rglru":
+        p["rglru"] = init_rglru_params(cfg, ks[0], dtype)
+    if with_cross:
+        p["ln_x"] = jnp.zeros((d,), jnp.float32)
+        p["xattn"] = _init_attn(cfg, ks[1], dtype, cross=True)
+    if spec.kind != "mamba":
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["moe" if spec.moe else "mlp"] = (
+            _init_moe(cfg, ks[2], dtype) if spec.moe
+            else _init_mlp(cfg, ks[2], dtype))
+    return p
+
+
+def _init_stage(stage: Stage, cfg: ModelConfig, key, dtype,
+                with_cross: bool = False) -> List[Dict]:
+    out = []
+    for i, spec in enumerate(stage.period):
+        keys = jax.random.split(jax.random.fold_in(key, i), stage.count)
+        out.append(jax.vmap(
+            lambda k, s=spec: _init_layer(s, cfg, k, dtype, with_cross))(keys))
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "stages": [
+            _init_stage(st, cfg, jax.random.fold_in(ks[1], i), dtype,
+                        with_cross=cfg.is_encdec)
+            for i, st in enumerate(cfg.stages())],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            ks[2], (cfg.d_model, cfg.vocab)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    if cfg.is_encdec:
+        enc_stage = Stage((LayerSpec("attn"),), cfg.n_enc_layers)
+        params["encoder"] = {
+            "stages": [_init_stage(enc_stage, cfg, ks[3], dtype)],
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    """ShapeDtypeStruct pytree — zero allocation (dry-run path)."""
+    return jax.eval_shape(partial(init_params, cfg),
+                          jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+def _cache_len(spec: LayerSpec, cfg: ModelConfig, max_len: int) -> int:
+    w = spec.window or cfg.window
+    return min(w, max_len) if w else max_len
+
+
+def _init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      max_len: int, dtype) -> Dict:
+    c: Dict[str, Any] = {}
+    if spec.kind in ("attn", "local"):
+        S = _cache_len(spec, cfg, max_len)
+        c["k"] = jnp.zeros((batch, cfg.n_kv, S, cfg.head_dim), dtype)
+        c["v"] = jnp.zeros((batch, cfg.n_kv, S, cfg.head_dim), dtype)
+    elif spec.kind == "mamba":
+        d_inner, H, P = ssm_dims(cfg)
+        conv_ch = d_inner + 2 * cfg.ssm_state
+        c["state"] = jnp.zeros((batch, H, P, cfg.ssm_state), jnp.float32)
+        c["conv"] = jnp.zeros((batch, 3, conv_ch), dtype)
+    elif spec.kind == "rglru":
+        w = cfg.rnn_width or cfg.d_model
+        c["h"] = jnp.zeros((batch, w), jnp.float32)
+        c["conv"] = jnp.zeros((batch, cfg.conv_width - 1, w), dtype)
+    if cfg.is_encdec:
+        c["xk"] = jnp.zeros((batch, cfg.n_kv, cfg.n_audio_frames,
+                             cfg.head_dim), dtype)
+        c["xv"] = jnp.zeros((batch, cfg.n_kv, cfg.n_audio_frames,
+                             cfg.head_dim), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> List:
+    dtype = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype \
+        else _cdt(cfg)
+    out = []
+    for st in cfg.stages():
+        stage_c = []
+        for spec in st.period:
+            one = _init_layer_cache(spec, cfg, batch, max_len, dtype)
+            stage_c.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (st.count,) + x.shape), one))
+        out.append(stage_c)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(partial(init_cache, cfg, batch, max_len))
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+def _qkv(cfg, p, x, positions):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = qmm(x, p["wq"]) + (p["bq"] if "bq" in p else 0)
+    k = qmm(x, p["wk"]) + (p["bk"] if "bk" in p else 0)
+    v = qmm(x, p["wv"]) + (p["bv"] if "bv" in p else 0)
+    q = constrain(q.reshape(B, S, H, hd).transpose(0, 2, 1, 3),
+                  "batch", "model", None, None)
+    k = constrain(k.reshape(B, S, KV, hd).transpose(0, 2, 1, 3),
+                  "batch", "model", None, None)
+    v = constrain(v.reshape(B, S, KV, hd).transpose(0, 2, 1, 3),
+                  "batch", "model", None, None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _self_attn_train(spec, cfg, p, x):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(cfg, p, x, positions)
+    window = spec.window or cfg.window
+    o = attention(q, k, v, causal=True, window=window,
+                  chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+                  p_bf16=cfg.attn_p_bf16,
+                  causal_groups=cfg.attn_causal_groups)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return qmm(o, p["wo"])
+
+
+def _self_attn_decode(spec, cfg, p, x, cache, pos):
+    """One-token decode with ring-buffer (window) or linear cache."""
+    B = x.shape[0]
+    positions = jnp.full((1,), pos)
+    q, k, v = _qkv(cfg, p, x, positions)
+    S_c = cache["k"].shape[2]
+    window = spec.window or cfg.window
+    slot = (pos % S_c) if window else jnp.minimum(pos, S_c - 1)
+    if cfg.decode_onehot_update:
+        # masked select is elementwise along the (sequence-sharded) cache
+        # dim — stays local per shard, unlike a cross-shard DUS (§Perf C2)
+        hot = (jnp.arange(S_c) == slot)[None, None, :, None]
+        ck = jnp.where(hot, k[:, :, :1].astype(cache["k"].dtype),
+                       cache["k"])
+        cv = jnp.where(hot, v[:, :, :1].astype(cache["v"].dtype),
+                       cache["v"])
+    else:
+        ck = cache["k"].at[:, :, slot].set(
+            k[:, :, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, slot].set(
+            v[:, :, 0].astype(cache["v"].dtype))
+    n_valid = jnp.minimum(pos + 1, S_c)
+    kv_valid = jnp.broadcast_to(jnp.arange(S_c)[None] < n_valid, (B, S_c))
+    o = attention(q, ck, cv, causal=False, window=0, kv_valid=kv_valid)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, -1)
+    return qmm(o, p["wo"]), {"k": ck, "v": cv}
+
+
+def _cross_attn(cfg, p, x, xk, xv):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = qmm(x, p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    o = attention(q, xk, xv, causal=False, window=0)
+    return qmm(o.transpose(0, 2, 1, 3).reshape(B, S, -1), p["wo"])
+
+
+def _make_cross_kv(cfg, p, enc_out):
+    B, Se, _ = enc_out.shape
+    KV, hd = cfg.n_kv, cfg.head_dim
+    xk = qmm(enc_out, p["wk"]).reshape(B, Se, KV, hd).transpose(0, 2, 1, 3)
+    xv = qmm(enc_out, p["wv"]).reshape(B, Se, KV, hd).transpose(0, 2, 1, 3)
+    return xk, xv
+
+
+def apply_layer(spec: LayerSpec, cfg: ModelConfig, p, x, *,
+                mode: str, cache=None, pos=None, enc_out=None):
+    """mode: 'train' | 'prefill' | 'decode'.  Returns (x, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    if cfg.seq_parallel and mode in ("train", "prefill"):
+        # Megatron-style sequence parallelism: the residual stream is
+        # sharded over 'model' along S, so the TP boundary collectives
+        # become all-gather/reduce-scatter pairs instead of all-reduces.
+        x = constrain(x, "batch", "model", None)
+    elif mode == "decode" and cfg.decode_replicate_activations:
+        # weight-stationary serving: replicate the tiny per-step activations
+        # so 2D-sharded weights contract locally (psum of small partials)
+        # instead of GSPMD all-gathering whole weight matrices every step
+        x = jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(None, None, None))
+    else:
+        x = constrain(x, "batch", None, None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind in ("attn", "local"):
+        if mode == "decode":
+            o, kv = _self_attn_decode(spec, cfg, p["attn"], h, cache, pos)
+            new_cache.update(kv)
+        else:
+            o = _self_attn_train(spec, cfg, p["attn"], h)
+            if mode == "prefill":
+                new_cache.update(_prefill_kv(spec, cfg, p["attn"], h, cache))
+    elif spec.kind == "mamba":
+        if mode == "decode":
+            o, st, cv = mamba_decode_step(p["mamba"], h, cache["state"],
+                                          cache["conv"], cfg)
+            new_cache.update({"state": st, "conv": cv})
+        else:
+            o, st, cv = mamba_forward(p["mamba"], h, cfg)
+            if mode == "prefill":
+                new_cache.update({"state": st,
+                                  "conv": cv.astype(cache["conv"].dtype)})
+    elif spec.kind == "rglru":
+        if mode == "decode":
+            o, hh, cv = rglru_decode_step(p["rglru"], h, cache["h"],
+                                          cache["conv"], cfg)
+            new_cache.update({"h": hh, "conv": cv})
+        else:
+            o, hh, cv = rglru_forward(p["rglru"], h, cfg)
+            if mode == "prefill":
+                new_cache.update({"h": hh,
+                                  "conv": cv.astype(cache["conv"].dtype)})
+    x = x + o
+    if cfg.is_encdec and enc_out is not None:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if mode == "prefill" or mode == "train":
+            xk, xv = _make_cross_kv(cfg, p["xattn"], enc_out)
+            if mode == "prefill":
+                new_cache["xk"], new_cache["xv"] = (
+                    xk.astype(cache["xk"].dtype),
+                    xv.astype(cache["xv"].dtype))
+        else:
+            xk, xv = cache["xk"], cache["xv"]
+            new_cache["xk"], new_cache["xv"] = xk, xv
+        x = x + _cross_attn(cfg, p["xattn"], hx, xk, xv)
+    if spec.kind != "mamba":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            y = moe(p["moe"], h2, cfg)
+        else:
+            y = mlp(p["mlp"] if "mlp" in p else p["moe"], h2, cfg.act)
+        x = x + y
+    return x.astype(_cdt(cfg)), new_cache
+
+
+def _prefill_kv(spec, cfg, p, h, cache):
+    """Recompute K/V for the cache at prefill (window layers keep the ring
+    tail)."""
+    B, S, _ = h.shape
+    positions = jnp.arange(S)
+    _, k, v = _qkv(cfg, p, h, positions)
+    S_c = cache["k"].shape[2]
+    window = spec.window or cfg.window
+    if window and S >= S_c:
+        # ring buffer: place last S_c tokens at slots (pos % S_c)
+        tail = lax.dynamic_slice_in_dim(k, S - S_c, S_c, axis=2)
+        tailv = lax.dynamic_slice_in_dim(v, S - S_c, S_c, axis=2)
+        idx = jnp.arange(S - S_c, S) % S_c
+        ck = jnp.zeros_like(cache["k"]).at[:, :, idx].set(
+            tail.astype(cache["k"].dtype))
+        cv = jnp.zeros_like(cache["v"]).at[:, :, idx].set(
+            tailv.astype(cache["v"].dtype))
+    else:
+        pad = S_c - S
+        ck = jnp.pad(k, ((0, 0), (0, 0), (0, max(pad, 0)), (0, 0))
+                     )[:, :, :S_c].astype(cache["k"].dtype)
+        cv = jnp.pad(v, ((0, 0), (0, 0), (0, max(pad, 0)), (0, 0))
+                     )[:, :, :S_c].astype(cache["v"].dtype)
+    return {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------------------
+# stage scan
+# --------------------------------------------------------------------------
+def run_stages(cfg: ModelConfig, stages_params, x, *, mode: str,
+               caches=None, pos=None, enc_out=None, stage_list=None):
+    stage_list = stage_list or cfg.stages()
+    new_caches = []
+    for si, (stage, sp) in enumerate(zip(stage_list, stages_params)):
+        cache_s = caches[si] if caches is not None else [None] * len(
+            stage.period)
+
+        def body(carry, xs):
+            xx = carry
+            ncs = []
+            for i, spec in enumerate(stage.period):
+                pp = xs[0][i]
+                cc = xs[1][i] if caches is not None else None
+                xx, nc = apply_layer(spec, cfg, pp, xx, mode=mode, cache=cc,
+                                     pos=pos, enc_out=enc_out)
+                ncs.append(nc)
+            return xx, tuple(ncs)
+
+        if cfg.remat and mode == "train":
+            policy = {"nothing": jax.checkpoint_policies.nothing_saveable,
+                      "dots": jax.checkpoint_policies
+                      .dots_with_no_batch_dims_saveable,
+                      }[cfg.remat_policy]
+            body = jax.checkpoint(body, policy=policy)
+        xs = (sp, cache_s if caches is not None else [
+            jax.tree.map(lambda _: None, p) for p in sp])
+        if caches is None:
+            x, ncs = lax.scan(lambda c, s: body(c, (s, None)), x, sp)
+        else:
+            x, ncs = lax.scan(body, x, (sp, cache_s))
+        new_caches.append(list(ncs) if isinstance(ncs, tuple) else ncs)
+    return x, new_caches
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+def _embed_tokens(cfg, params, tokens, extra_embeds=None):
+    x = params["embed"][tokens].astype(_cdt(cfg))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(_cdt(cfg)), x], axis=1)
+    return x
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    if isinstance(head, dict):
+        return qmm(x, head).astype(jnp.float32)
+    return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+
+def _run_encoder(cfg, params, frames):
+    """Whisper-style encoder over stub frame embeddings [B, F, d]."""
+    x = frames.astype(_cdt(cfg))
+    enc_stage = Stage((LayerSpec("attn"),), cfg.n_enc_layers)
+
+    def body(carry, sp):
+        xx = carry
+        h = rms_norm(xx, sp["ln1"], cfg.norm_eps)
+        B, S, _ = h.shape
+        q, k, v = _qkv(cfg, sp["attn"], h, jnp.arange(S))
+        o = attention(q, k, v, causal=False, window=0)
+        xx = xx + o.transpose(0, 2, 1, 3).reshape(B, S, -1) @ sp["attn"]["wo"]
+        h2 = rms_norm(xx, sp["ln2"], cfg.norm_eps)
+        return (xx + mlp(sp["mlp"], h2, "gelu")).astype(_cdt(cfg)), None
+
+    x, _ = lax.scan(body, x, params["encoder"]["stages"][0][0])
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward_train(cfg: ModelConfig, params, batch: Dict) -> jax.Array:
+    """batch: tokens [B,S'] (+ vision_embeds / audio_frames) → logits."""
+    enc_out = None
+    extra = None
+    if cfg.is_encdec:
+        enc_out = _run_encoder(cfg, params, batch["audio_frames"])
+    if cfg.n_vis_tokens:
+        extra = batch["vision_embeds"]
+    x = _embed_tokens(cfg, params, batch["tokens"], extra)
+    x, _ = run_stages(cfg, params["stages"], x, mode="train",
+                      enc_out=enc_out)
+    return _logits(cfg, params, x)
+
+
+def lm_loss(cfg: ModelConfig, params, batch: Dict) -> jax.Array:
+    logits = forward_train(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.n_vis_tokens:
+        logits = logits[:, cfg.n_vis_tokens:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # masked-sum instead of take_along_axis: gathers along the vocab-TP
+    # sharded axis would force GSPMD to all-gather full logits (≈40 GB/dev
+    # at train_4k); the masked reduction keeps vocab sharded end to end.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    ll = jnp.where(vocab_iota == labels[..., None], logits, 0.0).sum(-1)
+    return (lse - ll).mean()
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict, max_len: int
+            ) -> Tuple[jax.Array, List]:
+    enc_out = None
+    extra = None
+    if cfg.is_encdec:
+        enc_out = _run_encoder(cfg, params, batch["audio_frames"])
+    if cfg.n_vis_tokens:
+        extra = batch["vision_embeds"]
+    x = _embed_tokens(cfg, params, batch["tokens"], extra)
+    caches = init_cache(cfg, x.shape[0], max_len)
+    x, caches = run_stages(cfg, params["stages"], x, mode="prefill",
+                           caches=caches, enc_out=enc_out)
+    return _logits(cfg, params, x[:, -1:]), caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, token: jax.Array,
+                pos: jax.Array) -> Tuple[jax.Array, List]:
+    """token [B,1] int32; pos scalar int32 → (logits [B,1,V], caches)."""
+    x = _embed_tokens(cfg, params, token)
+    x, caches = run_stages(cfg, params["stages"], x, mode="decode",
+                           caches=caches, pos=pos,
+                           enc_out=(jnp.zeros(()) if cfg.is_encdec else None))
+    return _logits(cfg, params, x), caches

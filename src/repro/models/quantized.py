@@ -1,0 +1,70 @@
+"""Quantized (vertical-layout) serving weights — the paper's technique as a
+first-class serving feature.
+
+On real TPUs the Pallas bit-plane kernel (kernels/bitserial_matmul) computes
+``Σ_b 2^b (x_i8 @ W_b)`` from 1-bit planes; in the XLA-lowered dry-run the
+HLO-visible equivalent at 8 bits is a *native int8×int8→int32 dot* with
+per-column scales: the dot's HBM operand is genuinely 1 byte/weight, which
+is exactly the roofline property being bought (decode is weight-bandwidth
+bound, §Perf).
+
+``quantize_serving_params`` maps every dense matmul leaf
+(wq/wk/wv/wo/w1/w2/w3/lm_head) to ``{"q8": int8[W.shape], "s": f32[N]}``;
+``qmm`` dispatches on that structure.  MoE expert tensors are kept dense
+(per-expert scales + the EP shard_map path are a further iteration).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+_TARGETS = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "lm_head"}
+
+
+def _is_target(path) -> bool:
+    names = [str(getattr(p, "key", "")) for p in path]
+    if "moe" in names:
+        return False
+    return names and names[-1] in _TARGETS
+
+
+def quantize_serving_params(params, abstract: bool = False):
+    """Transform a (possibly abstract) params tree for quantized serving."""
+
+    def tx(path, leaf):
+        if not _is_target(path) or leaf.ndim < 2:
+            return leaf
+        n = leaf.shape[-1]
+        s_shape = tuple(leaf.shape[:-2]) + (n,)
+        if abstract or isinstance(leaf, jax.ShapeDtypeStruct):
+            return {"q8": jax.ShapeDtypeStruct(leaf.shape, jnp.int8),
+                    "s": jax.ShapeDtypeStruct(s_shape, jnp.float32)}
+        w = leaf.astype(jnp.float32)
+        scale = jnp.maximum(jnp.abs(w).max(axis=-2), 1e-8) / 127.0
+        q = jnp.clip(jnp.round(w / scale[..., None, :]), -127, 127
+                     ).astype(jnp.int8)
+        return {"q8": q, "s": scale}
+
+    return jax.tree_util.tree_map_with_path(tx, params)
+
+
+def is_quantized(w: Any) -> bool:
+    return isinstance(w, dict) and "q8" in w
+
+
+def qmm(x: jax.Array, w) -> jax.Array:
+    """x @ w for dense or quantized (int8 + per-column scale) weights."""
+    if not is_quantized(w):
+        return x @ w
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    xs = jnp.maximum(jnp.abs(x2).max(axis=-1), 1e-8) / 127.0
+    xi = jnp.clip(jnp.round(x2 / xs[:, None]), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(xi, w["q8"],
+                              dimension_numbers=(((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * xs[:, None] * w["s"][None, :]
+    return y.reshape(*shape[:-1], -1).astype(x.dtype)

@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = σ(W_a x_t)            (recurrence gate)
+    i_t = σ(W_x x_t)            (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``lax.associative_scan`` (log-depth parallel scan —
+the TPU-friendly form); decode is the O(1) recurrent update.  The paper's
+vertical-layout "implicit shift" argument maps here: the recurrence carries
+state across steps without any shifting circuitry, exactly the SIMDRAM
+row-indexing trick (DESIGN.md §2).
+
+Block structure (Griffin temporal block): linear in (2 branches), causal
+conv(4) on the recurrent branch, RG-LRU, gated output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+RGLRU_C = 8.0
+
+
+def init_rglru_params(cfg, key, dtype) -> Dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    k = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "in_x": (jax.random.normal(k[0], (d, w)) * s).astype(dtype),
+        "in_gate": (jax.random.normal(k[1], (d, w)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(k[2], (cfg.conv_width, w)) * 0.2
+                   ).astype(dtype),
+        "w_a": (jax.random.normal(k[3], (w, w)) * w ** -0.5).astype(dtype),
+        "w_i": (jax.random.normal(k[4], (w, w)) * w ** -0.5).astype(dtype),
+        "lambda_p": jnp.full((w,), 0.5, jnp.float32),
+        "out": (jax.random.normal(k[0], (w, d)) * w ** -0.5).astype(dtype),
+    }
+
+
+def _conv(x, conv_w, conv_state=None):
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(pad[:, i:i + x.shape[1]] * conv_w[i][None, None]
+              for i in range(w))
+    return out, pad[:, -(w - 1):]
+
+
+def _gates(params, xb):
+    r = jax.nn.sigmoid(xb @ params["w_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xb @ params["w_i"]).astype(jnp.float32)
+    log_a = -RGLRU_C * jax.nn.softplus(params["lambda_p"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * xb.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_forward(params, x, cfg):
+    """x [B,S,d] → (y [B,S,d], h_final [B,w], conv_state)."""
+    xb = x @ params["in_x"]
+    gate = x @ params["in_gate"]
+    xb, conv_state = _conv(xb, params["conv_w"])
+    a, b = _gates(params, xb)                       # [B,S,w] f32
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    aa, h = lax.associative_scan(combine, (a, b), axis=1)
+    y = h * jax.nn.gelu(gate.astype(jnp.float32), approximate=True)
+    return (y.astype(x.dtype) @ params["out"]), h[:, -1], conv_state
+
+
+def rglru_decode_step(params, x, h, conv_state, cfg):
+    """x [B,1,d]; h [B,w] → (y [B,1,d], h', conv_state')."""
+    xb = x @ params["in_x"]
+    gate = x @ params["in_gate"]
+    xb, conv_state = _conv(xb, params["conv_w"], conv_state)
+    a, b = _gates(params, xb)                       # [B,1,w]
+    h = a[:, 0] * h + b[:, 0]
+    y = h[:, None] * jax.nn.gelu(gate.astype(jnp.float32), approximate=True)
+    return (y.astype(x.dtype) @ params["out"]), h, conv_state

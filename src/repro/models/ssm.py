@@ -1,0 +1,162 @@
+"""Mamba-2 (SSD — state-space duality) temporal mixer.
+
+Chunked SSD algorithm (Dao & Gu 2024): intra-chunk quadratic attention-like
+term + inter-chunk linear recurrence over states, scanned with
+``lax.scan`` so HLO stays O(1) in sequence length.  Decode is the O(1)
+recurrent update — there is *no KV cache* (see DESIGN.md
+§Arch-applicability: VBI paging is inapplicable; the constant-size SSM
+state block is still tracked as a VB).
+
+Shapes: d_inner = expand·d_model = H·P heads; B/C projections share one
+group (G=1); state size N.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_dims(cfg) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or d_inner // (cfg.ssm_head_dim or 64)
+    P = d_inner // H
+    return d_inner, H, P
+
+
+def init_mamba_params(cfg, key, dtype) -> Dict:
+    d = cfg.d_model
+    d_inner, H, P = ssm_dims(cfg)
+    N = cfg.ssm_state
+    k = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * N
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(k[0], (d, 2 * d_inner + 2 * N + H))
+                    * s).astype(dtype),
+        "conv_w": (jax.random.normal(k[1], (4, conv_ch)) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(k[2], (d_inner, d))
+                     * d_inner ** -0.5).astype(dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, H, P = ssm_dims(cfg)
+    N = cfg.ssm_state
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _conv(xBC, conv_w, conv_state=None):
+    """Depthwise causal conv width 4.  Training: pad-left; decode: state."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, xBC], axis=1)
+    out = sum(pad[:, i:i + xBC.shape[1]] * conv_w[i][None, None]
+              for i in range(w))
+    new_state = pad[:, -(w - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _gated_norm(y, z, scale, eps):
+    dt = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = y * lax.rsqrt((y * y).mean(-1, keepdims=True) + eps)
+    return (y * (1.0 + scale)).astype(dt)
+
+
+def mamba_forward(params, x, cfg):
+    """Training/prefill: x [B, S, d] → (y [B, S, d], final_state, conv_state)."""
+    Bsz, S, d = x.shape
+    d_inner, H, P = ssm_dims(cfg)
+    N = cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC, conv_state = _conv(xBC, params["conv_w"])
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])               # [B,S,H]
+    A = -jnp.exp(params["A_log"])                           # [H]
+
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    xh = xs.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    Bc = B.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    dA = dtc * A                                            # [B,nc,Q,H]
+    seg = jnp.cumsum(dA, axis=2)                            # [B,nc,Q,H]
+
+    # intra-chunk (quadratic within Q)
+    rel = seg[:, :, :, None] - seg[:, :, None]              # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)              # [B,nc,Q,Q]
+    M = CB[..., None] * L                                   # [B,nc,Q,Q,H]
+    y_diag = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", M, dtc, xh)
+
+    # chunk states + inter-chunk scan
+    decay_end = jnp.exp(seg[:, :, -1:, :] - seg)            # [B,nc,Q,H]
+    states = jnp.einsum("bckh,bckn,bckhp->bchpn",
+                        dtc * decay_end, Bc, xh)            # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(seg[:, :, -1])                    # [B,nc,H]
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_prevs = lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # [B,nc,H,P,N]
+
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs,
+                       jnp.exp(seg))
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    y = y + params["D"][None, None, :, None] * xs.reshape(
+        Bsz, Sp, H, P)[:, :S]
+    y = y.reshape(Bsz, S, d_inner)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    return (y @ params["out_proj"]).astype(x.dtype), h_final, conv_state
+
+
+def mamba_decode_step(params, x, state, conv_state, cfg):
+    """x [B, 1, d]; state [B,H,P,N]; conv_state [B,3,conv_ch]."""
+    Bsz = x.shape[0]
+    d_inner, H, P = ssm_dims(cfg)
+    N = cfg.ssm_state
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC, conv_state = _conv(xBC, params["conv_w"], conv_state)
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"])               # [B,H]
+    A = -jnp.exp(params["A_log"])
+    xh = xs[:, 0].reshape(Bsz, H, P).astype(jnp.float32)
+    Bv = B[:, 0].astype(jnp.float32)                        # [B,N]
+    Cv = C[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                 # [B,H]
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bv, xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cv, state) \
+        + params["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    return (y @ params["out_proj"]).astype(x.dtype), state, conv_state

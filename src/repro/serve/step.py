@@ -1,0 +1,24 @@
+"""Serving steps: prefill and decode, as pure lowered functions.
+
+``decode_*`` dry-run shapes lower ``serve_step`` = one new token against a
+KV cache of ``seq_len`` (the assignment's contract); the VBI-paged variant
+lives in ``serve/paged.py`` and examples/serve_paged.py.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from ..models.config import ModelConfig
+from ..models.model import decode_step, prefill
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, caches, token, pos):
+        return decode_step(cfg, params, caches, token, pos)
+    return serve_step

@@ -1,0 +1,89 @@
+"""The training step: loss → grads (with microbatched gradient accumulation)
+→ AdamW update.  Pure function of (state, batch); buffers donated by the
+caller's jit.
+
+Gradient accumulation is a ``lax.scan`` over microbatches — besides fitting
+activation memory (nemotron-340b needs 16 microbatches at train_4k), it lets
+XLA's latency-hiding scheduler overlap microbatch i's FSDP all-gathers with
+microbatch i-1's compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models.config import ModelConfig
+from ..models.model import init_params, lm_loss
+from ..optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key
+                     ) -> Dict[str, Any]:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    return jax.eval_shape(partial(init_train_state, cfg, opt_cfg),
+                          jax.random.key(0))
+
+
+def _split_microbatches(batch: Dict, accum: int) -> Dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by accum {accum}"
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    loss_fn: Optional[Callable] = None,
+                    compress: Optional[Callable] = None) -> Callable:
+    """Returns train_step(state, batch) → (state, metrics).
+
+    ``compress`` optionally transforms grads before the optimizer (e.g.
+    int8 error-feedback compression for the cross-pod all-reduce)."""
+    base_loss = loss_fn or (lambda p, b: lm_loss(cfg, p, b))
+    accum = max(1, cfg.grad_accum)
+    if cfg.bf16_params_in_compute:
+        import jax.numpy as _jnp
+
+        def loss_fn(p, b):        # noqa: F811
+            pc = jax.tree.map(
+                lambda x: x.astype(_jnp.bfloat16)
+                if (x.dtype == _jnp.float32 and x.ndim >= 2) else x, p)
+            return base_loss(pc, b)
+    else:
+        loss_fn = base_loss
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+
+            def mb_step(carry, mb):
+                acc_g, acc_l = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, b_: a + b_.astype(a.dtype), acc_g, g)
+                return (acc_g, acc_l + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = lax.scan(mb_step, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        if compress is not None:
+            grads = compress(grads)
+        new_params, new_opt, om = adamw_update(params, grads, state["opt"],
+                                               opt_cfg)
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (dryrun.py sets 512 itself, in its own
+# process).  Multi-device tests spawn subprocesses (test_distributed.py).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def mask_width(v, n_bits):
+    v = np.asarray(v).astype(np.uint64)
+    if n_bits < 64:
+        v = v & np.uint64((1 << n_bits) - 1)
+    return v

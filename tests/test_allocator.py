@@ -1,0 +1,138 @@
+"""Row-to-operand allocation invariants (Appendix B constraints)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import allocate_cell
+from repro.core.mig import Mig
+from repro.core.subarray import TRA_TRIPLES, d
+from repro.core.uprogram import Aap, Ap
+
+LEGAL = {frozenset(t) for t in TRA_TRIPLES}
+B_NAMES = {"T0", "T1", "T2", "T3", "DCC0", "DCC1",
+           "~DCC0", "~DCC1"}
+
+
+def random_cell(ops, n_inputs=3):
+    m = Mig()
+    sigs = [m.input(f"x{i}") for i in range(n_inputs)]
+    for sel, a, b, c, na in ops:
+        sa, sb, sc = (sigs[a % len(sigs)], sigs[b % len(sigs)],
+                      sigs[c % len(sigs)])
+        if na:
+            sa = Mig.not_(sa)
+        if sel == 0:
+            sigs.append(m.maj(sa, sb, sc))
+        elif sel == 1:
+            sigs.append(m.and_(sa, sb))
+        elif sel == 2:
+            sigs.append(m.or_(sa, sb))
+        else:
+            sigs.append(m.xor_(sa, sb))
+    return m, sigs[-1]
+
+
+cell_strategy = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 9), st.integers(0, 9),
+              st.integers(0, 9), st.booleans()),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=cell_strategy)
+def test_allocation_structural_invariants(ops):
+    m, out = random_cell(ops)
+    inputs = {f"x{i}": d(f"X{i}", 1, 0) for i in range(3)}
+    uops, n_tmp = allocate_cell(m, {d("OUT", 1, 0): out}, inputs)
+    for op in uops:
+        if isinstance(op, Ap):
+            names = frozenset(r[1] for r in op.triple)
+            assert names in LEGAL, f"illegal TRA {names}"
+        elif isinstance(op, Aap):
+            # sources must be readable rows; dests writable (not C-group)
+            if not op.is_maj_src:
+                assert op.src[0] in ("B", "C", "D")
+                if op.src[0] == "B":
+                    assert op.src[1] in B_NAMES
+            for dst in op.dsts:
+                assert dst[0] in ("B", "D"), "cannot write constants"
+    # bounded temporaries (6 compute rows + spills only when needed)
+    assert n_tmp <= 2 * len(ops) + 2
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=cell_strategy, seed=st.integers(0, 2**31))
+def test_allocation_preserves_function(ops, seed):
+    """Execute the allocated μOps with destructive-TRA semantics and compare
+    with direct MIG evaluation — the end-to-end Step-2 correctness check."""
+    import jax.numpy as jnp
+    from repro.core.engine import execute
+    from repro.core.uprogram import Segment, UProgram, coalesce
+
+    m, out = random_cell(ops)
+    inputs = {f"x{i}": d(f"X{i}", 0, 0) for i in range(3)}
+    uops, _ = allocate_cell(m, {d("OUT", 0, 0): out}, inputs)
+    prog = UProgram("cell", 1, [Segment(coalesce(uops), 1)])
+    rng = np.random.default_rng(seed)
+    vals = {f"x{i}": int(rng.integers(0, 2**32, dtype=np.uint64))
+            for i in range(3)}
+    plane_in = {f"X{i}": jnp.asarray([[vals[f"x{i}"]]], jnp.uint32)
+                for i in range(3)}
+    got = int(np.asarray(
+        execute(prog, plane_in, 1, out_name="OUT", out_bits=1))[0, 0])
+    ref = m.eval([out], vals)[0] & 0xFFFFFFFF
+    assert got == ref
+
+
+def test_negated_operands_routed_through_dcc():
+    """A cell needing ¬x must stage it via a dual-contact-cell row."""
+    m = Mig()
+    x, y = m.input("x"), m.input("y")
+    node = m.maj(Mig.not_(x), y, Mig.not_(m.maj(x, y, m.input("z"))))
+    uops, _ = allocate_cell(
+        m, {d("OUT", 0, 0): node},
+        {"x": d("X", 0, 0), "y": d("Y", 0, 0), "z": d("Z", 0, 0)})
+    touched = set()
+    for op in uops:
+        if isinstance(op, Aap):
+            for r in op.dsts:
+                if r[0] == "B":
+                    touched.add(r[1])
+    assert any(t.startswith("~DCC") or t.startswith("DCC")
+               for t in touched), "no DCC usage for complemented operand"
+
+
+def test_b_row_pinned_carry_cell():
+    """Carry kept in a B-group row across iterations (Sec 2.3.2): the
+    allocator must keep the body legal and bit-exact (command count parity
+    with the D-row carry is recorded in EXPERIMENTS §Perf-core)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.bitplane import BitPlaneArray, pack_np, unpack_np
+    from repro.core.engine import execute
+    from repro.core.mig import Mig
+    from repro.core.subarray import b, c
+    from repro.core.uprogram import Aap, Segment, UProgram, assert_valid, coalesce
+
+    def cell(m):
+        a = m.input("a")
+        bb = m.input("b")
+        cin = m.input("cin")
+        cout = m.maj(a, bb, cin)
+        s = m.maj(Mig.not_(cout), cin, m.maj(a, bb, Mig.not_(cin)))
+        return {d("OUT", 1, 0): s, b("T3"): cout}
+
+    m = Mig()
+    outs = cell(m)
+    ops, _ = allocate_cell(m, outs, {"a": d("A", 1, 0), "b": d("B", 1, 0),
+                                     "cin": b("T3")})
+    prog = UProgram("add_bcarry", 8, [
+        Segment([Aap((b("T3"),), c(0))], 1),
+        Segment(coalesce(ops), 8)])
+    assert_valid(prog)
+    rng = np.random.default_rng(1)
+    x = rng.integers(-128, 128, 40)
+    y = rng.integers(-128, 128, 40)
+    planes = {"A": pack_np(x, 8).planes, "B": pack_np(y, 8).planes}
+    out = unpack_np(BitPlaneArray(execute(prog, planes, 2, out_bits=8),
+                                  40, True))
+    np.testing.assert_array_equal(np.asarray(out) & 0xFF, (x + y) & 0xFF)

@@ -1,0 +1,103 @@
+"""Step 1: AOIG→MIG synthesis — functional equivalence + axiom checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aoig import Aoig
+from repro.core.mig import CONST0, CONST1, Mig
+from repro.core.synthesis import aoig_to_mig, optimize_mig
+
+MASK = (1 << 64) - 1
+
+
+def random_aoig(draw_ops, n_inputs):
+    """Build an AOIG from a generative op list."""
+    g = Aoig()
+    sigs = [g.input(f"x{i}") for i in range(n_inputs)]
+    for kind, a, b, na, nb in draw_ops:
+        sa = sigs[a % len(sigs)]
+        sb = sigs[b % len(sigs)]
+        if na:
+            sa = Aoig.not_(sa)
+        if nb:
+            sb = Aoig.not_(sb)
+        sigs.append(g.and_(sa, sb) if kind else g.or_(sa, sb))
+    return g, sigs[-1]
+
+
+op_strategy = st.lists(
+    st.tuples(st.booleans(), st.integers(0, 30), st.integers(0, 30),
+              st.booleans(), st.booleans()),
+    min_size=1, max_size=25)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy, neg_out=st.booleans(), seed=st.integers(0, 2**31))
+def test_aoig_to_mig_equivalence(ops, neg_out, seed):
+    """Naive and optimized MIGs compute the same function as the AOIG."""
+    n_in = 4
+    aoig, out = random_aoig(ops, n_in)
+    if neg_out:
+        out = Aoig.not_(out)
+    rng = np.random.default_rng(seed)
+    env = {f"x{i}": int(rng.integers(0, MASK, dtype=np.uint64))
+           for i in range(n_in)}
+    ref = aoig.eval([out], env)[0] & MASK
+    for optimize in (False, True):
+        mig, outs = aoig_to_mig(aoig, [out], optimize=optimize)
+        got = mig.eval(outs, env)[0] & MASK
+        assert got == ref, f"optimize={optimize}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=op_strategy)
+def test_optimize_never_grows(ops):
+    aoig, out = random_aoig(ops, 4)
+    mig_n, outs_n = aoig_to_mig(aoig, [out], optimize=False)
+    mig_o, outs_o = aoig_to_mig(aoig, [out], optimize=True)
+    assert mig_o.size(outs_o) <= mig_n.size(outs_n)
+
+
+def test_majority_axioms():
+    m = Mig()
+    x, y = m.input("x"), m.input("y")
+    assert m.maj(x, x, y) == x                      # Ω.M duplicate
+    assert m.maj(x, Mig.not_(x), y) == y            # Ω.M complement
+    assert m.maj(CONST0, CONST1, x) == x            # const resolve
+    assert m.maj(CONST0, CONST0, x) == CONST0
+    assert m.maj(CONST1, CONST1, x) == CONST1
+    a = m.maj(x, y, CONST0)
+    b = m.maj(y, x, CONST0)
+    assert a == b                                   # Ω.C commutativity
+
+
+def test_inverter_propagation():
+    m = Mig()
+    x, y, z = m.input("x"), m.input("y"), m.input("z")
+    a = m.maj(Mig.not_(x), Mig.not_(y), Mig.not_(z))
+    b = Mig.not_(m.maj(x, y, z))
+    assert a == b                                   # self-duality Ω.I
+
+
+def test_full_adder_mig_is_three_nodes():
+    """The paper's optimized FA (Fig 2.5a) has 3 MAJ nodes."""
+    m = Mig()
+    a, b, c = m.input("a"), m.input("b"), m.input("c")
+    cout = m.maj(a, b, c)
+    s = m.maj(Mig.not_(cout), c, m.maj(a, b, Mig.not_(c)))
+    assert m.size([s, cout]) == 3
+    # exhaustive truth-table check
+    for bits in range(8):
+        env = {"a": -(bits & 1), "b": -((bits >> 1) & 1),
+               "c": -((bits >> 2) & 1)}
+        sv, cv = m.eval([s, cout], env)
+        total = (bits & 1) + ((bits >> 1) & 1) + ((bits >> 2) & 1)
+        assert (sv & 1) == (total & 1)
+        assert (cv & 1) == (total >> 1)
+
+
+def test_naive_mode_skips_rewrites():
+    m = Mig(opt=False)
+    x, y = m.input("x"), m.input("y")
+    node = m.maj(x, x, y)
+    assert node != x                                # kept as a real node

@@ -1,0 +1,148 @@
+"""Steps 2+3: μProgram generation + engine execution vs numpy oracles
+(property-based), structural validity, coalescing, cost model, control unit.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (OPS, ORACLES, PAPER_16, ControlUnit, BbopRequest,
+                        apply_op, compare_to_ambit, get_uprogram, op_cost,
+                        pack_np, unpack_np)
+from repro.core.subarray import ROW_BITS
+from repro.core.uprogram import assert_valid
+
+
+def _run_op(op, ins, n):
+    spec = OPS[op]
+    bps = [pack_np(x, n) for x in ins]
+    out = apply_op(op, *bps)
+    m = np.uint64((1 << out.n_bits) - 1) if out.n_bits < 64 \
+        else np.uint64(0xFFFFFFFFFFFFFFFF)
+    got = unpack_np(out).astype(np.uint64) & m
+    ref = np.asarray(ORACLES[op](*ins, n), np.uint64) & m
+    return got, ref
+
+
+LINEAR_OPS = [o for o in OPS if OPS[o].scaling != "quadratic"]
+QUAD_OPS = [o for o in OPS if OPS[o].scaling == "quadratic"]
+
+# executor jit-compiles are cached per (op, n): parametrize (op, n)
+# explicitly and let hypothesis sweep input VALUES (cheap re-runs).
+_WIDTHS = {o: (8, 32) for o in LINEAR_OPS}
+_WIDTHS.update({"add": (8, 16, 32, 64), "gt": (8, 64)})
+
+
+@pytest.mark.parametrize("op", LINEAR_OPS)
+def test_linear_ops_match_oracle(op):
+    spec = OPS[op]
+
+    def check(seed, n):
+        rng = np.random.default_rng(seed)
+        lo, hi = -(1 << (n - 1)), (1 << (n - 1))
+        ins = [rng.integers(lo, hi, size=33)
+               for _ in range(spec.n_inputs)]
+        if spec.n_inputs == 3:
+            ins[0] = rng.integers(0, 2, size=33)            # predicate
+        got, ref = _run_op(op, ins, n)
+        np.testing.assert_array_equal(got, ref, err_msg=f"{op} n={n}")
+
+    for n in _WIDTHS[op]:
+        @settings(max_examples=5, deadline=None)
+        @given(seed=st.integers(0, 2**31))
+        def inner(seed):
+            check(seed, n)
+        inner()
+
+
+@pytest.mark.parametrize("op", QUAD_OPS)
+def test_quadratic_ops_match_oracle(op):
+    n = 8
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def inner(seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 1 << n, size=17)
+        b = rng.integers(1, 1 << n, size=17)        # avoid div by zero
+        got, ref = _run_op(op, [a, b], n)
+        np.testing.assert_array_equal(got, ref, err_msg=f"{op} n={n}")
+
+    inner()
+
+
+def test_edge_values():
+    n = 8
+    a = np.array([0, -128, 127, -1, 1, -128, 127, 0])
+    b = np.array([0, -128, 127, -1, -1, 127, -128, 1])
+    for op in ("add", "sub", "gt", "ge", "eq", "max", "min", "abs", "relu"):
+        spec = OPS[op]
+        ins = [a, b][: spec.n_inputs]
+        got, ref = _run_op(op, ins, n)
+        np.testing.assert_array_equal(got, ref, err_msg=op)
+
+
+def test_ambit_style_matches_oracle_too():
+    rng = np.random.default_rng(3)
+    a = rng.integers(-128, 128, 20)
+    b = rng.integers(-128, 128, 20)
+    for op in ("add", "gt", "eq", "relu"):
+        spec = OPS[op]
+        bps = [pack_np(x, 8) for x in ([a, b][: spec.n_inputs])]
+        out = apply_op(op, *bps, style="ambit")
+        m = np.uint64((1 << out.n_bits) - 1)
+        got = unpack_np(out).astype(np.uint64) & m
+        ref = np.asarray(
+            ORACLES[op](*[a, b][: spec.n_inputs], 8), np.uint64) & m
+        np.testing.assert_array_equal(got, ref, err_msg=f"ambit {op}")
+
+
+@pytest.mark.parametrize("op", list(PAPER_16))
+def test_uprograms_structurally_valid(op):
+    for n in (8, 32):
+        if OPS[op].scaling == "quadratic" and n > 8:
+            continue
+        for style in ("simdram", "ambit"):
+            assert_valid(get_uprogram(op, n, style))
+
+
+def test_simdram_beats_ambit_on_average():
+    r = compare_to_ambit(list(PAPER_16), 32)
+    thr = np.mean([v["throughput_ratio"] for v in r.values()])
+    assert thr > 1.5, f"expected >1.5x vs Ambit, got {thr:.2f}"
+    assert all(v["throughput_ratio"] >= 0.99 for v in r.values())
+
+
+def test_scaling_classes():
+    """Latency classes (Sec. 2.6.1): linear vs quadratic in n."""
+    add8 = op_cost("add", 8).latency_ns
+    add32 = op_cost("add", 32).latency_ns
+    assert 3.0 < add32 / add8 < 5.0                 # ~linear
+    mul8 = op_cost("mul", 8).latency_ns
+    mul16 = op_cost("mul", 16).latency_ns
+    assert 3.0 < mul16 / mul8 < 5.0                 # ~quadratic (2^2)
+
+
+def test_control_unit_loop_counter_and_scratchpad():
+    cu = ControlUnit(scratchpad_entries=2)
+    for op in ("add", "sub", "gt"):
+        cu.register(get_uprogram(op, 8))
+    big = pack_np(np.zeros(ROW_BITS * 2 + 5, np.int64), 8)
+    cu.enqueue(BbopRequest("add", [big, big], 8))
+    cu.enqueue(BbopRequest("add", [big, big], 8))
+    cu.enqueue(BbopRequest("sub", [big, big], 8))
+    cu.enqueue(BbopRequest("gt", [big, big], 8))   # evicts LRU
+    recs = cu.drain()
+    assert recs[0]["trips"] == 3                   # Loop Counter: ceil(2+eps)
+    assert cu.stats["scratch_hits"] == 1           # second 'add'
+    assert cu.stats["scratch_misses"] == 3
+    assert cu.stats["commands"] == sum(r["commands"] for r in recs)
+
+
+def test_vertical_layout_roundtrip_property():
+    rng = np.random.default_rng(0)
+    for n in (8, 16, 32, 64):
+        lo, hi = -(1 << (n - 1)), (1 << (n - 1))
+        x = rng.integers(lo, hi, size=100)
+        bp = pack_np(x, n)
+        assert bp.planes.shape == (n, 4)
+        np.testing.assert_array_equal(unpack_np(bp), x)

@@ -1,0 +1,96 @@
+"""Quantized (vertical-layout) serving path + data-aware placement hooks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.vbi.address_space import VBProps
+from repro.distributed.sharding import placement_hint
+from repro.models import decode_step, forward_train, init_params, prefill
+from repro.models.quantized import is_quantized, qmm, quantize_serving_params
+
+
+def test_quantize_serving_params_roundtrip():
+    cfg = dataclasses.replace(smoke_config("qwen2.5-3b"),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    p = init_params(cfg, jax.random.key(0))
+    pq = quantize_serving_params(p)
+    stacked = pq["stages"][0][0]
+    assert is_quantized(stacked["attn"]["wq"])
+    assert stacked["attn"]["wq"]["q8"].dtype == jnp.int8
+    # norms / biases untouched
+    assert not is_quantized(stacked["ln1"])
+    # qmm dequantizes within tolerance
+    w = p["stages"][0][0]["attn"]["wq"][0]
+    wq = jax.tree.map(lambda x: x[0], stacked["attn"]["wq"])
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (4, w.shape[0])), jnp.float32)
+    rel = float(jnp.abs(qmm(x, wq) - x @ w).max()
+                / (jnp.abs(x @ w).max() + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_quantized_decode_close_to_dense():
+    cfg = dataclasses.replace(smoke_config("qwen3-0.6b"),
+                              param_dtype="float32",
+                              compute_dtype="float32",
+                              tie_embeddings=False)
+    p = init_params(cfg, jax.random.key(0))
+    pq = quantize_serving_params(p)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab, (2, 10)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    lg_d, c_d = prefill(cfg, p, batch, max_len=16)
+    lg_q, c_q = prefill(cfg, pq, batch, max_len=16)
+    tv = float(jnp.abs(jax.nn.softmax(lg_d[:, 0])
+                       - jax.nn.softmax(lg_q[:, 0])).sum(-1).max()) / 2
+    assert tv < 0.1, tv
+    dq, _ = decode_step(cfg, pq, c_q, toks[:, :1], jnp.int32(10))
+    assert bool(jnp.isfinite(dq).all())
+
+
+def test_fp8_kv_cache_decode_consistency():
+    cfg = dataclasses.replace(
+        smoke_config("qwen2.5-3b"), param_dtype="float32",
+        compute_dtype="float32", kv_cache_dtype="float8_e4m3fn")
+    p = init_params(cfg, jax.random.key(0))
+    toks = jnp.asarray(np.random.default_rng(2).integers(
+        0, cfg.vocab, (2, 13)), jnp.int32)
+    full = forward_train(cfg, p, {"tokens": toks, "labels": toks})
+    _, caches = prefill(cfg, p, {"tokens": toks[:, :12],
+                                 "labels": toks[:, :12]}, max_len=16)
+    assert jax.tree.leaves(caches)[0].dtype == jnp.float8_e4m3fn
+    lg, _ = decode_step(cfg, p, caches, toks[:, 12:13], jnp.int32(12))
+    tv = float(jnp.abs(jax.nn.softmax(full[:, 12])
+                       - jax.nn.softmax(lg[:, 0])).sum(-1).max()) / 2
+    assert tv < 0.15, tv
+
+
+def test_decode_onehot_update_matches_dus():
+    cfg = dataclasses.replace(smoke_config("qwen3-0.6b"),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    cfg_oh = dataclasses.replace(cfg, decode_onehot_update=True)
+    p = init_params(cfg, jax.random.key(0))
+    toks = jnp.asarray(np.random.default_rng(3).integers(
+        0, cfg.vocab, (2, 9)), jnp.int32)
+    _, caches = prefill(cfg, p, {"tokens": toks[:, :8],
+                                 "labels": toks[:, :8]}, max_len=12)
+    a, ca = decode_step(cfg, p, jax.tree.map(lambda x: x, caches),
+                        toks[:, 8:9], jnp.int32(8))
+    b, cb = decode_step(cfg_oh, p, caches, toks[:, 8:9], jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for la, lb in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32), atol=1e-5)
+
+
+def test_placement_hints_from_vb_properties():
+    assert placement_hint(VBProps.LATENCY_SENSITIVE)["prefer"] == "replicate"
+    assert placement_hint(VBProps.BANDWIDTH_SENSITIVE)["prefer"] == \
+        "shard_wide"
+    assert placement_hint(VBProps.COLD)["tier"] == "host"
+    assert placement_hint(VBProps.NONE)["tier"] == "hbm"

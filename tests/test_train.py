@@ -1,0 +1,175 @@
+"""Training runtime: convergence, grad accumulation, checkpoint/resume,
+straggler monitor, compression, paged serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_pytree, save_pytree
+from repro.data.pipeline import SyntheticLMData
+from repro.distributed.compression import make_ef_compressor, quantize_leaf
+from repro.models import ModelConfig, forward_train, init_params
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import StragglerMonitor, TrainLoop
+from repro.train.step import init_train_state, make_train_step
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                   n_heads=4, n_kv=2, head_dim=8, d_ff=64, vocab=128,
+                   remat=False)
+
+
+def _data(cfg, B=8, S=32):
+    return SyntheticLMData(cfg, B, S, seed=0)
+
+
+def test_loss_decreases():
+    cfg = TINY
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    step = jax.jit(make_train_step(cfg, opt))
+    data = _data(cfg)
+    losses = []
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[::8]
+
+
+def test_grad_accum_matches_full_batch():
+    cfg1 = dataclasses.replace(TINY, grad_accum=1, param_dtype="float32")
+    cfg4 = dataclasses.replace(TINY, grad_accum=4, param_dtype="float32")
+    opt = AdamWConfig(lr=1e-3)
+    s1 = init_train_state(cfg1, opt, jax.random.key(0))
+    s4 = jax.tree.map(lambda x: x, s1)
+    batch = {k: jnp.asarray(v) for k, v in _data(cfg1).batch_at(0).items()}
+    s1n, m1 = jax.jit(make_train_step(cfg1, opt))(s1, batch)
+    s4n, m4 = jax.jit(make_train_step(cfg4, opt))(s4, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        s1n["params"], s4n["params"])
+    assert max(jax.tree.leaves(diffs)) < 5e-5
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    cfg = TINY
+    opt = AdamWConfig()
+    state = init_train_state(cfg, opt, jax.random.key(1))
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (10, 20, 30):
+        mgr.save(state, s, blocking=True)
+    assert latest_step(tmp_path) == 30
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert len(steps) == 2                           # retention
+    restored, step = mgr.restore_latest(state)
+    assert step == 30
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_is_exact(tmp_path):
+    """Train 6 steps straight vs 3 + checkpoint + resume + 3."""
+    cfg = TINY
+    opt = AdamWConfig(lr=1e-3)
+    data = _data(cfg)
+
+    def batch_fn(i):
+        return {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+
+    step = jax.jit(make_train_step(cfg, opt))
+    sA = init_train_state(cfg, opt, jax.random.key(2))
+    for i in range(6):
+        sA, _ = step(sA, batch_fn(i))
+
+    sB = init_train_state(cfg, opt, jax.random.key(2))
+    for i in range(3):
+        sB, _ = step(sB, batch_fn(i))
+    save_pytree(sB, tmp_path, 3)
+    sB2 = restore_pytree(sB, tmp_path, 3)
+    for i in range(3, 6):
+        sB2, _ = step(sB2, batch_fn(i))
+    for a, b in zip(jax.tree.leaves(sA), jax.tree.leaves(sB2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_train_loop_with_monitor_and_logs(tmp_path):
+    cfg = TINY
+    opt = AdamWConfig(lr=1e-3)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    data = _data(cfg)
+    step = jax.jit(make_train_step(cfg, opt))
+    loop = TrainLoop(step, lambda i: {k: jnp.asarray(v) for k, v in
+                                      data.batch_at(i).items()},
+                     CheckpointManager(tmp_path), ckpt_every=5,
+                     log_path=str(tmp_path / "log.jsonl"))
+    state, end, losses = loop.run(state, 0, 8)
+    assert end == 8 and len(losses) == 8
+    assert latest_step(tmp_path) is not None
+    assert (tmp_path / "log.jsonl").exists()
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(factor=2.0)
+    for _ in range(10):
+        m.observe(0.1)
+    assert m.observe(0.5) is True
+    assert m.slow_steps == 1
+    assert m.observe(0.12) is False
+
+
+def test_bf16_optimizer_state():
+    cfg = TINY
+    opt = AdamWConfig(state_dtype="bfloat16", lr=1e-3)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    assert all(x.dtype == jnp.bfloat16
+               for x in jax.tree.leaves(state["opt"]["m"]))
+    batch = {k: jnp.asarray(v) for k, v in _data(cfg).batch_at(0).items()}
+    state, m = jax.jit(make_train_step(cfg, opt))(state, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_gradient_compression_error_feedback():
+    compress, init = make_ef_compressor()
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(1000)
+                          * 0.01, jnp.float32)}
+    ef = init(g)
+    total_in, total_out = jnp.zeros(1000), jnp.zeros(1000)
+    for _ in range(20):
+        deq, ef = compress(g, ef)
+        total_in = total_in + g["w"]
+        total_out = total_out + deq["w"]
+    # error feedback: accumulated compressed grads track the true sum
+    rel = float(jnp.abs(total_out - total_in).max()
+                / jnp.abs(total_in).max())
+    assert rel < 0.02, rel
+    q, s = quantize_leaf(g["w"])
+    assert q.dtype == jnp.int8                     # 4x fewer wire bytes
+
+
+def test_compressed_train_step_converges():
+    cfg = TINY
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5)
+    compress, init_ef = make_ef_compressor()
+    ef = {"ef": None}
+
+    def hook(grads):
+        if ef["ef"] is None:
+            ef["ef"] = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        deq, ef["ef"] = compress(grads, ef["ef"])
+        return deq
+
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    step = make_train_step(cfg, opt, compress=hook)   # not jitted (hook state)
+    data = _data(cfg)
+    losses = []
+    for i in range(25):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2

@@ -1,0 +1,178 @@
+"""VBI: MTL allocation/translation invariants, protection, paged KV."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.vbi import (MTL, ClientVBTable, PagedKVManager,
+                            PermissionError_, PhysicalMemory, RWX, VBProps)
+from repro.core.vbi.address_space import (SIZE_CLASSES, decode_vbi_addr,
+                                          encode_vbi_addr, size_class_for)
+from repro.core.vbi.mtl import PAGE
+
+
+def test_address_codec_roundtrip():
+    for sid in range(8):
+        addr = encode_vbi_addr(sid, 5, 1234)
+        s2, v2, o2 = decode_vbi_addr(addr)
+        assert (s2, v2, o2) == (sid, 5, 1234)
+
+
+def test_size_class_selection():
+    assert size_class_for(1) == 0
+    assert size_class_for(4096) == 0
+    assert size_class_for(4097) == 1
+    assert SIZE_CLASSES[1] // SIZE_CLASSES[0] == 32
+
+
+def test_delayed_allocation_and_zero_fill():
+    mtl = MTL(PhysicalMemory(256))
+    vb = mtl.enable_vb(1)
+    assert mtl.phys.frames_in_use == 0
+    r = mtl.read(1, vb, 4096)                  # untouched → zero line
+    assert (r == 0).all() and mtl.phys.frames_in_use == 0
+    assert mtl.stats["zero_fill_reads"] == 1
+    mtl.writeback(1, vb, 4096, np.full(64, 7, np.uint8))
+    assert mtl.phys.frames_in_use == 1         # first dirty writeback
+    assert (mtl.read(1, vb, 4096) == 7).all()
+    assert (mtl.read(1, vb, 4096 + 64) == 0).all()  # same page, clean line
+
+
+def test_early_reservation_keeps_direct_map():
+    mtl = MTL(PhysicalMemory(256), early_reservation=True)
+    vb = mtl.enable_vb(1)                      # 128 KB = 32 pages
+    for page in range(4):
+        mtl.writeback(1, vb, page * PAGE, np.ones(8, np.uint8))
+    info = mtl.vit[1][vb]
+    assert info.translation_type == "direct"
+    f, acc = info.translation.translate(2)
+    assert acc == 0                            # zero table-walk accesses
+
+
+def test_flexible_translation_no_reservation():
+    mtl = MTL(PhysicalMemory(256), early_reservation=False)
+    small = mtl.enable_vb(1)
+    mtl.writeback(1, small, 0, np.ones(8, np.uint8))
+    assert mtl.vit[1][small].translation_type == "single"
+    big = mtl.enable_vb(5)                     # 128 GB class → multi-level
+    mtl.writeback(5, big, 0, np.ones(8, np.uint8))
+    assert mtl.vit[5][big].translation_type == "multi"
+    _, acc = mtl.vit[5][big].translation.translate(0)
+    assert acc == mtl.vit[5][big].translation.levels
+
+
+def test_cow_clone_semantics():
+    mtl = MTL(PhysicalMemory(256))
+    a = mtl.enable_vb(1)
+    mtl.writeback(1, a, 0, np.arange(64, dtype=np.uint8))
+    b = mtl.enable_vb(1)
+    mtl.clone_vb(1, a, b)
+    frames_before = mtl.phys.frames_in_use
+    assert (mtl.read(1, b, 0) == np.arange(64)).all()
+    assert mtl.phys.frames_in_use == frames_before   # shared
+    mtl.writeback(1, b, 0, np.zeros(64, np.uint8))   # COW break
+    assert (mtl.read(1, a, 0) == np.arange(64)).all()
+    assert (mtl.read(1, b, 0) == 0).all()
+    assert mtl.stats["cow_copies"] == 1
+
+
+def test_promotion_preserves_prefix():
+    mtl = MTL(PhysicalMemory(1024))
+    small = mtl.enable_vb(0)                   # 4 KB
+    mtl.writeback(0, small, 100, np.full(16, 9, np.uint8))
+    large = mtl.enable_vb(1)
+    mtl.promote_vb(0, small, 1, large)
+    assert (mtl.read(1, large, 100, 16) == 9).all()
+    assert mtl.stats["promotions"] == 1
+
+
+def test_swap_roundtrip():
+    mtl = MTL(PhysicalMemory(256), early_reservation=False)
+    vb = mtl.enable_vb(1)
+    mtl.writeback(1, vb, 0, np.full(32, 5, np.uint8))
+    mtl.swap_out(1, vb, 0)
+    frame, _ = mtl.translate(1, vb, 0)
+    assert frame is None
+    mtl.swap_in(1, vb, 0)
+    assert (mtl.read(1, vb, 0, 32) == 5).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seq=st.lists(st.tuples(st.booleans(), st.integers(0, 5)),
+                    min_size=1, max_size=30))
+def test_buddy_frame_accounting(seq):
+    """Random enable/write/disable keeps frame refcounts consistent."""
+    mtl = MTL(PhysicalMemory(512))
+    live = {}
+    for alloc, k in seq:
+        if alloc or not live:
+            vb = mtl.enable_vb(0)
+            mtl.writeback(0, vb, 0, np.ones(4, np.uint8))
+            live[vb] = True
+        else:
+            vb = list(live)[k % len(live)]
+            del live[vb]
+            mtl.disable_vb(0, vb)
+    assert mtl.phys.frames_in_use == len(live)
+    for vb in list(live):
+        mtl.disable_vb(0, vb)
+    assert mtl.phys.frames_in_use == 0
+    assert (mtl.phys.refcount >= 0).all()
+
+
+def test_protection_decoupled_from_translation():
+    mtl = MTL(PhysicalMemory(256))
+    tbl = ClientVBTable(mtl)
+    alice = tbl.new_client(1, "alice")
+    bob = tbl.new_client(2, "bob")
+    vb = mtl.enable_vb(1, VBProps.READ_ONLY)
+    idx_a = tbl.attach(alice, 1, vb, RWX.RW)
+    tbl.attach(bob, 1, vb, RWX.R)
+    tbl.check_access(alice, idx_a, 0, RWX.W)       # ok
+    with pytest.raises(PermissionError_):
+        tbl.check_access(bob, 0, 0, RWX.W)         # bob is read-only
+    with pytest.raises(PermissionError_):
+        tbl.check_access(alice, idx_a, SIZE_CLASSES[1] + 1, RWX.R)
+    with pytest.raises(PermissionError_):
+        tbl.check_access(alice, 7, 0, RWX.R)       # invalid CVT index
+    assert mtl.vit[1][vb].refcount == 2
+    tbl.destroy_client(bob)
+    assert mtl.vit[1][vb].refcount == 1
+    # CVT cache converges to hits
+    for _ in range(50):
+        tbl.check_access(alice, idx_a, 64, RWX.R)
+    assert tbl.caches[1].hit_rate > 0.9
+
+
+def test_paged_kv_promotion_and_release():
+    import jax.numpy as jnp
+    mgr = PagedKVManager(n_layers=1, n_pages=64, page_size=2, n_kv=1,
+                         head_dim=4, max_seqs=2)
+    mgr.new_seq(0)
+    assert mgr.pages_in_use == 0                   # delayed allocation
+    for t in range(9):
+        mgr.append(0, jnp.full((1, 1, 4), t + 1.0, jnp.bfloat16),
+                   jnp.zeros((1, 1, 4), jnp.bfloat16))
+    assert mgr.pages_in_use == 5
+    assert mgr.stats["promotions"] >= 2            # 1→4→16 page classes
+    k, v, mask = mgr.gather(0, 0)
+    assert int(mask.sum()) == 9
+    assert float(k[8, 0, 0]) == 9.0
+    mgr.release_seq(0)
+    assert mgr.pages_in_use == 0
+
+
+def test_translation_sim_trends():
+    from repro.core.vbi.transsim import TraceConfig, run_comparison
+    r = run_comparison(TraceConfig(n_accesses=30000))
+    assert r["speedup_native"] > 1.5               # paper: 2.18x
+    assert r["speedup_vm"] > r["speedup_native"]   # VM benefit larger
+    assert r["speedup_native_2m"] > 1.0            # paper: 1.77x
+
+
+def test_hetero_placement_trends():
+    from repro.core.vbi.hetero import PCM_DRAM, TL_DRAM, speedup
+    p = speedup(PCM_DRAM)
+    t = speedup(TL_DRAM)
+    assert p["runtime_speedup"] > 1.2              # paper: 1.33x
+    assert t["runtime_speedup"] > 1.1              # paper: 1.21x
+    assert p["amat_ratio"] > t["amat_ratio"]       # PCM gap is larger
