@@ -1,0 +1,20 @@
+# CI entry points.  `make test` is the tier-1 verify command (ROADMAP.md);
+# `make bench-serve` exercises the continuous-batching serve engine and
+# reports its speedup over the legacy per-sequence path.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-serve bench serve-demo
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench-serve:
+	$(PYTHON) -m benchmarks.bench_lm_serving --smoke
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+serve-demo:
+	$(PYTHON) examples/serve_paged.py --requests 6 --max-new 16

@@ -1,14 +1,19 @@
-"""Beyond-paper: bit-plane (vertical-layout) quantized weights in LM decode.
+"""Beyond-paper: bit-plane (vertical-layout) quantized weights in LM decode,
+plus the continuous-batching serve-engine throughput comparison.
 
 Decode is weight-bandwidth-bound (§Roofline); SIMDRAM's vertical layout cuts
 HBM bytes per weight.  This bench reports (1) functional accuracy of the
-QuantizedLinear path on a real layer, (2) weight-byte ratios, and (3) the
+QuantizedLinear path on a real layer, (2) weight-byte ratios, (3) the
 memory-roofline delta read from the dry-run artifacts when the q8 decode
-variant has been generated (§Perf hillclimb)."""
+variant has been generated (§Perf hillclimb), and (4) decode tokens/s of the
+jitted PagedEngine vs. the legacy per-sequence PagedServer (DESIGN.md §5) —
+the data-centric-vs-processor-centric gap, measurable on CPU."""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +21,62 @@ import numpy as np
 
 from repro.kernels import QuantizedLinear
 from .common import RESULTS, emit
+
+
+def bench_serve_engine(decode_steps: int = 24) -> list[str]:
+    """Steady-state decode throughput: jitted engine vs legacy reference."""
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.paged import PagedServer
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    n_slots, page_size = 4, 8
+    n_pages = 1 + n_slots * 16
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (n_slots, 4)).astype(np.int32)
+
+    # -- legacy per-sequence path (B·L host calls + host sync per token) ----
+    srv = PagedServer(cfg, params, n_pages=n_pages, page_size=page_size,
+                      max_seqs=n_slots)
+    slots = list(range(n_slots))
+    for s in slots:
+        srv.admit(s)
+    for c in range(prompt.shape[1]):                    # prefill + warmup
+        out = srv.decode(jnp.asarray(prompt[:, c])[:, None], slots)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for i in range(decode_steps):
+        out = srv.decode(jnp.full((n_slots, 1), i % cfg.vocab, jnp.int32),
+                         slots)
+    jax.block_until_ready(out)
+    legacy_s = time.perf_counter() - t0
+    legacy_tps = n_slots * decode_steps / legacy_s
+
+    # -- jitted continuous-batching engine ----------------------------------
+    eng = PagedEngine(cfg, params, n_pages=n_pages, page_size=page_size,
+                      max_seqs=n_slots, max_pages_per_seq=16)
+    for s in slots:
+        eng.admit(s)
+    eng.prefill_chunk(jnp.asarray(prompt),
+                      jnp.full((n_slots,), prompt.shape[1], jnp.int32))
+    mask = jnp.ones((n_slots,), bool)
+    out = eng.decode(jnp.zeros((n_slots,), jnp.int32), mask)   # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for i in range(decode_steps):
+        out = eng.decode(jnp.full((n_slots,), i % cfg.vocab, jnp.int32), mask)
+    jax.block_until_ready(out)
+    engine_s = time.perf_counter() - t0
+    engine_tps = n_slots * decode_steps / engine_s
+
+    speedup = engine_tps / legacy_tps
+    return [emit(
+        "lm_serving/engine_vs_legacy_decode",
+        engine_s / (n_slots * decode_steps) * 1e6,
+        f"engine={engine_tps:.1f}tok/s legacy={legacy_tps:.1f}tok/s "
+        f"speedup={speedup:.2f}x")]
 
 
 def run() -> list[str]:
@@ -48,8 +109,17 @@ def run() -> list[str]:
         lines.append(emit(
             f"lm_serving/{b['arch']}_decode_mem_term", 0.0,
             f"baseline={mb:.4f}s q8={mq:.4f}s ({mb/max(mq,1e-12):.2f}x)"))
+    lines += bench_serve_engine()
     return lines
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve-engine comparison only (CI fast path)")
+    args = ap.parse_args()
+    if args.smoke:
+        print("name,us_per_call,derived")
+        bench_serve_engine()
+    else:
+        run()

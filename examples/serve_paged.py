@@ -1,8 +1,10 @@
-"""VBI-paged serving demo: batched decoding with continuous admission,
-delayed page allocation, and size-class promotion — the MTL managing the KV
-address space (DESIGN.md §2).
+"""VBI-paged serving demo: jitted continuous-batching decode with device-side
+delayed page allocation — the MTL managing the KV address space (DESIGN.md
+§2, engine architecture in §5).
 
     PYTHONPATH=src python examples/serve_paged.py --requests 6 --max-new 16
+
+Pass ``--legacy`` for the per-sequence reference path (serve/paged.py).
 """
 import sys
 

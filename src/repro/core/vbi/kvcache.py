@@ -93,6 +93,158 @@ def gather_kv(state: PagedKVState, seq_idx: jax.Array, layer: jax.Array,
     return k, v, mask
 
 
+# --------------------------------------------------------------------------
+# Device-resident serve state (the MTL moved onto the device)
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedServeState:
+    """Everything the continuous-batching decode step needs, on device.
+
+    The host-side :class:`PagedKVManager` keeps the MTL's *policy* (size
+    classes, VB lifecycle); this state moves the MTL's *mechanism* — page
+    pool, page table, per-slot lengths, and the free list — into a pure
+    functional pytree so a whole decode step (delayed allocation included)
+    runs inside one ``jax.jit`` with zero host round-trips.
+
+        k_pages, v_pages : [n_layers, n_pages, page_size, n_kv, head_dim]
+        page_table       : [max_seqs, max_pages_per_seq] int32 (0 = null)
+        seq_lens         : [max_seqs] int32 — next write position per slot
+        slot_active      : [max_seqs] bool
+        free_stack       : [n_pages] int32 — free page ids in [0, free_top)
+        free_top         : [] int32
+    """
+    k_pages: jax.Array
+    v_pages: jax.Array
+    page_table: jax.Array
+    seq_lens: jax.Array
+    slot_active: jax.Array
+    free_stack: jax.Array
+    free_top: jax.Array
+
+    def tree_flatten(self):
+        return (self.k_pages, self.v_pages, self.page_table, self.seq_lens,
+                self.slot_active, self.free_stack, self.free_top), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def max_seqs(self) -> int:
+        return self.page_table.shape[0]
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.page_table.shape[1]
+
+
+def init_serve_state(n_layers: int, n_pages: int, page_size: int, n_kv: int,
+                     head_dim: int, max_seqs: int, max_pages_per_seq: int,
+                     dtype=jnp.float32) -> PagedServeState:
+    """Fresh pool.  Page 0 is the null page (scratch target for masked-out
+    slots, never attended to), so ``n_pages - 1`` pages are allocatable."""
+    return PagedServeState(
+        k_pages=jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                          dtype),
+        v_pages=jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                          dtype),
+        page_table=jnp.zeros((max_seqs, max_pages_per_seq), jnp.int32),
+        seq_lens=jnp.zeros((max_seqs,), jnp.int32),
+        slot_active=jnp.zeros((max_seqs,), bool),
+        free_stack=jnp.arange(1, n_pages + 1, dtype=jnp.int32),
+        free_top=jnp.asarray(n_pages - 1, jnp.int32),
+    )
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def admit_slot(state: PagedServeState, slot: jax.Array) -> PagedServeState:
+    """Enable a VB for ``slot``: clears its translation row and length but
+    allocates NOTHING — backing pages arrive on first dirty writeback."""
+    return PagedServeState(
+        state.k_pages, state.v_pages,
+        state.page_table.at[slot].set(0),
+        state.seq_lens.at[slot].set(0),
+        state.slot_active.at[slot].set(True),
+        state.free_stack, state.free_top)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def release_slot(state: PagedServeState, slot: jax.Array) -> PagedServeState:
+    """Disable ``slot``'s VB: push its backing pages onto the free stack."""
+    ps = state.page_size
+    # clamp: a slot can never own more pages than its table row holds,
+    # even if seq_lens was driven past capacity by a buggy caller
+    n_owned = jnp.minimum(-(-state.seq_lens[slot] // ps),
+                          state.max_pages_per_seq)
+    idx = jnp.arange(state.max_pages_per_seq)
+    owned = idx < n_owned
+    # scatter owned pages to [free_top, free_top + n_owned); unowned lanes
+    # get an out-of-range index and are dropped.
+    dst = jnp.where(owned, state.free_top + jnp.cumsum(owned) - 1,
+                    state.free_stack.shape[0])
+    free_stack = state.free_stack.at[dst].set(state.page_table[slot],
+                                              mode="drop")
+    return PagedServeState(
+        state.k_pages, state.v_pages,
+        state.page_table.at[slot].set(0),
+        state.seq_lens.at[slot].set(0),
+        state.slot_active.at[slot].set(False),
+        free_stack, state.free_top + n_owned)
+
+
+def reserve_positions(state: PagedServeState, slot_mask: jax.Array
+                      ) -> Tuple[PagedServeState, jax.Array]:
+    """Reserve the next token position for every masked slot — the paper's
+    "allocate on first dirty writeback" resolved entirely on device.
+
+    A slot whose next position opens a fresh page pops one from the free
+    stack; all pops of one step are resolved with a single cumsum (no loop,
+    no host).  Returns (state', positions) where positions[i] is where slot
+    i's K/V land this step.  The scheduler guarantees the stack never
+    underflows (host mirrors the page accounting exactly).
+    """
+    ps = state.page_size
+    positions = state.seq_lens                              # [S]
+    needs = slot_mask & (positions % ps == 0)               # [S] bool
+    order = jnp.cumsum(needs.astype(jnp.int32)) - needs     # pop order
+    src = jnp.clip(state.free_top - 1 - order, 0)
+    new_pages = state.free_stack[src]                       # [S]
+    rows = jnp.arange(state.max_seqs)
+    page_idx = positions // ps
+    cur = state.page_table[rows, page_idx]
+    page_table = state.page_table.at[rows, page_idx].set(
+        jnp.where(needs, new_pages, cur))
+    return PagedServeState(
+        state.k_pages, state.v_pages, page_table,
+        positions + slot_mask.astype(jnp.int32),
+        state.slot_active,
+        state.free_stack,
+        state.free_top - needs.sum(dtype=jnp.int32)), positions
+
+
+def write_token_kv(k_pages: jax.Array, v_pages: jax.Array, layer,
+                   page_table: jax.Array, positions: jax.Array,
+                   slot_mask: jax.Array, k: jax.Array, v: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter one decode step's K/V ([max_seqs, n_kv, head_dim]) for one
+    layer into the page pool.  Masked-out slots write to the null page 0."""
+    ps = k_pages.shape[2]
+    rows = jnp.arange(page_table.shape[0])
+    page = jnp.where(slot_mask, page_table[rows, positions // ps], 0)
+    slot_in_page = positions % ps
+    return (k_pages.at[layer, page, slot_in_page].set(k.astype(k_pages.dtype)),
+            v_pages.at[layer, page, slot_in_page].set(v.astype(v_pages.dtype)))
+
+
 class PagedKVManager:
     """The MTL for the KV address space (host-side policy)."""
 

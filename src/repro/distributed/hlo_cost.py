@@ -194,12 +194,21 @@ class HloCostModel:
                                     (b.strip().lstrip("%"), 1.0, "control"))
             # costs
             if op == "dot":
-                lhs_m = re.search(r"dot\(%([\w\.\-]+)", rest)
+                # newer HLO prints operand types inline —
+                # ``dot(f32[256,512]{1,0} %lhs, ...)`` — so read the lhs
+                # shape from the call site first, falling back to the
+                # symbol table for the bare ``dot(%lhs, ...)`` form.
+                lhs_m = re.search(
+                    r"dot\(\s*(?:(\w+\[[\d,]*\])(?:\{[\d,]*\})?\s+)?"
+                    r"%([\w\.\-]+)", rest)
                 contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
                                      rest)
                 k = 1
-                if lhs_m and contract and shapes.get(lhs_m.group(1)):
-                    lm = _SHAPE_RE.match(shapes[lhs_m.group(1)])
+                lhs_shape = None
+                if lhs_m:
+                    lhs_shape = lhs_m.group(1) or shapes.get(lhs_m.group(2))
+                if lhs_shape and contract:
+                    lm = _SHAPE_RE.match(lhs_shape)
                     if lm:
                         dims = [int(d) for d in lm.group(2).split(",") if d]
                         for ci in contract.group(1).split(","):

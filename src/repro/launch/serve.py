@@ -1,20 +1,38 @@
-"""Serving launcher: VBI-paged batched decoding with continuous admission.
+"""Serving launcher: jitted continuous-batching over the VBI-paged engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 6 --max-new 24
+
+Default path: serve/engine.py (single jitted decode dispatch, device-side
+delayed page allocation) driven by serve/scheduler.py (admission, chunked
+prefill, eviction, preemption).  ``--legacy`` runs the per-sequence
+reference path (serve/paged.py) for comparison.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import ARCH_IDS, smoke_config, get_config
+from ..configs import ARCH_IDS, get_config, smoke_config
 from ..models.model import init_params
-from ..serve.paged import PagedServer
+from ..serve.engine import PagedEngine
+from ..serve.scheduler import Scheduler
+
+
+def serve_config(arch: str, smoke: bool = True):
+    """Dense-GQA float32 config for the paged serve paths (shared by the
+    launcher, benchmarks, and tests so they can never diverge)."""
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    if cfg.family not in ("dense", "vlm") or cfg.local_global_period:
+        cfg = dataclasses.replace(
+            smoke_config("qwen3-0.6b"), name=cfg.name + "-as-dense")
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               compute_dtype="float32", n_vis_tokens=0)
 
 
 def main(argv=None) -> None:
@@ -24,28 +42,49 @@ def main(argv=None) -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="per-sequence reference path (serve/paged.py)")
     args = ap.parse_args(argv)
 
-    import dataclasses
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.family not in ("dense", "vlm") or cfg.local_global_period:
-        cfg = dataclasses.replace(
-            smoke_config("qwen3-0.6b"), name=cfg.name + "-as-dense")
-    cfg = dataclasses.replace(cfg, param_dtype="float32",
-                              compute_dtype="float32", n_vis_tokens=0)
+    cfg = serve_config(args.arch, args.smoke)
     params = init_params(cfg, jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab, args.prompt_len).tolist()
+               for _ in range(args.requests)]
+
+    t0 = time.time()
+    if args.legacy:
+        decoded = _run_legacy(cfg, params, prompts, args)
+    else:
+        engine = PagedEngine(
+            cfg, params, n_pages=1 + args.batch_slots * 32, page_size=8,
+            max_seqs=args.batch_slots)
+        sched = Scheduler(engine, prefill_chunk=args.prefill_chunk)
+        for p in prompts:
+            sched.add_request(p, max_new=args.max_new)
+        for req in sched.run():
+            print(f"[serve] req {req.rid} done: "
+                  f"{req.prompt} -> {req.out[:8]}...")
+        decoded = args.requests * (args.prompt_len + args.max_new)
+        print(f"[serve] engine stats {engine.stats} "
+              f"sched stats {sched.stats}")
+    dt = time.time() - t0
+    print(f"[serve] {args.requests} requests, {decoded} token-steps in "
+          f"{dt:.1f}s ({decoded / dt:.1f} tok/s)")
+
+
+def _run_legacy(cfg, params, prompts, args) -> int:
+    from ..serve.paged import PagedServer
     srv = PagedServer(cfg, params, n_pages=1 + args.batch_slots * 32,
                       page_size=8, max_seqs=args.batch_slots)
-
-    rng = np.random.default_rng(args.seed)
-    pending = [{"id": i, "prompt": rng.integers(0, cfg.vocab, 4).tolist(),
-                "out": []} for i in range(args.requests)]
+    pending = [{"id": i, "prompt": p, "out": []}
+               for i, p in enumerate(prompts)]
     active = {}
-    t0 = time.time()
     decoded = 0
     while pending or active:
-        # continuous batching: admit while slots are free
         while pending and len(active) < args.batch_slots:
             req = pending.pop(0)
             slot = next(s for s in range(args.batch_slots)
@@ -57,8 +96,7 @@ def main(argv=None) -> None:
         for s in slots:
             st = active[s]
             seq = st["req"]["prompt"] + st["req"]["out"]
-            toks.append(seq[st["fed"]] if st["fed"] < len(seq)
-                        else seq[-1])
+            toks.append(seq[st["fed"]] if st["fed"] < len(seq) else seq[-1])
         logits = srv.decode(jnp.asarray(toks, jnp.int32)[:, None], slots)
         decoded += len(slots)
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
@@ -75,9 +113,8 @@ def main(argv=None) -> None:
             srv.evict(s)
             print(f"[serve] req {req['id']} done: "
                   f"{req['prompt']} -> {req['out'][:8]}...")
-    dt = time.time() - t0
-    print(f"[serve] {args.requests} requests, {decoded} token-steps in "
-          f"{dt:.1f}s ({decoded/dt:.1f} tok/s); VBI stats {srv.kv.stats}")
+    print(f"[serve] legacy VBI stats {srv.kv.stats}")
+    return decoded
 
 
 if __name__ == "__main__":

@@ -1,3 +1,6 @@
+from .engine import PagedEngine, batched_paged_attention
+from .scheduler import Request, Scheduler
 from .step import make_decode_step, make_prefill_step
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["make_prefill_step", "make_decode_step", "PagedEngine",
+           "batched_paged_attention", "Scheduler", "Request"]

@@ -1,0 +1,219 @@
+"""Device-resident, fully jitted continuous-batching decode engine.
+
+The legacy :class:`~repro.serve.paged.PagedServer` is the processor-centric
+anti-pattern the thesis argues against: every token bounces B·L times
+between host ("OS") and device (per-layer, per-sequence ``write_layer``
+calls) and ends with a host sync (``int(seq_lens.max())``).  This engine is
+the data-centric rewrite (DESIGN.md §5):
+
+  * the MTL's mechanism — page pool, page table, seq_lens, free list —
+    lives on device as a pure-functional :class:`PagedServeState`;
+  * delayed page allocation ("allocate on first dirty writeback") is
+    resolved *inside* the jitted step with one cumsum over the free stack;
+  * the whole layer stack folds into a single ``lax.scan``, so
+    ``decode_batch(params, state, tokens, slot_mask) -> (logits, state)``
+    is ONE jit-compiled dispatch with a static ``max_pages`` bucket —
+    no per-token host sync, state donated across steps;
+  * chunked prefill scans whole prompt chunks inside one dispatch.
+
+Attention resolves page translation on device either via the batched
+gather path (XLA, default on CPU) or the Pallas paged-attention kernel
+(``attn_impl="kernel"``, interpret-mode off-TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.vbi.address_space import VBProps
+from ..core.vbi.kvcache import (PagedServeState, admit_slot,
+                                init_serve_state, release_slot,
+                                reserve_positions, write_token_kv)
+from ..core.vbi.mtl import MTL, PhysicalMemory
+from ..kernels.paged_attention.kernel import paged_attn_one_seq
+from ..models.config import ModelConfig
+from ..models.layers import mlp, rms_norm
+from ..models.model import _logits
+from .paged import _qkv_ragged
+
+
+# --------------------------------------------------------------------------
+# batched paged attention over the device page pool
+# --------------------------------------------------------------------------
+def batched_paged_attention(q: jax.Array, k_pages_l: jax.Array,
+                            v_pages_l: jax.Array, page_table: jax.Array,
+                            seq_lens: jax.Array, max_pages: int) -> jax.Array:
+    """All slots at once, translation via the device page table.
+
+    q [S, n_kv, g, hd] (pre-scaled f32); k/v_pages_l [n_pages, ps, n_kv, hd];
+    page_table [S, max_pages_per_seq]; seq_lens [S] → out [S, n_kv, g, hd].
+    """
+    pts = page_table[:, :max_pages]                       # [S, P]
+    S, P = pts.shape
+    ps = k_pages_l.shape[1]
+    k = k_pages_l[pts].reshape(S, P * ps, *k_pages_l.shape[2:])
+    v = v_pages_l[pts].reshape(S, P * ps, *v_pages_l.shape[2:])
+    s = jnp.einsum("shgd,sphd->shgp", q, k.astype(q.dtype))
+    mask = (jnp.arange(P * ps)[None] < seq_lens[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("shgp,sphd->shgd", p, v.astype(q.dtype))
+    return out / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+
+
+def _kernel_paged_attention(q, k_pages_l, v_pages_l, page_table, seq_lens,
+                            max_pages: int) -> jax.Array:
+    """Same contract via the Pallas kernel (vmapped over slots); lowers for
+    real on TPU, interpret-mode everywhere else."""
+    pts = page_table[:, :max_pages]
+    interpret = jax.default_backend() != "tpu"
+
+    def one(pt, ln, qq):
+        return paged_attn_one_seq(pt, ln[None], qq, k_pages_l, v_pages_l,
+                                  interpret=interpret)
+
+    return jax.vmap(one)(pts, seq_lens, q)
+
+
+# --------------------------------------------------------------------------
+# the jitted token step (shared by decode and chunked prefill)
+# --------------------------------------------------------------------------
+def _token_step(cfg: ModelConfig, max_pages: int, attn_impl: str, params,
+                state: PagedServeState, tokens: jax.Array,
+                slot_mask: jax.Array) -> Tuple[jax.Array, PagedServeState]:
+    """One token for every masked slot: reserve → scan layers (KV scatter +
+    paged attention + MLP) → logits.  Pure; everything stays on device."""
+    state, positions = reserve_positions(state, slot_mask)
+    x = params["embed"][tokens].astype(jnp.float32)[:, None, :]   # [S,1,d]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    stacked = params["stages"][0][0]                    # layer-stacked pytree
+    n_layers = jax.tree.leaves(stacked)[0].shape[0]
+    attn_fn = (_kernel_paged_attention if attn_impl == "kernel"
+               else batched_paged_attention)
+
+    def body(carry, xs):
+        x, k_pages, v_pages = carry
+        lp, li = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = _qkv_ragged(cfg, lp["attn"], h, positions)
+        k_pages, v_pages = write_token_kv(
+            k_pages, v_pages, li, state.page_table, positions, slot_mask,
+            k[:, :, 0], v[:, :, 0])
+        qg = (q[:, :, 0].astype(jnp.float32) * scale).reshape(
+            q.shape[0], cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.head_dim)
+        o = attn_fn(qg, k_pages[li], v_pages[li], state.page_table,
+                    state.seq_lens, max_pages)
+        o = o.reshape(o.shape[0], 1, -1).astype(x.dtype)
+        x = x + o @ lp["attn"]["wo"]
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h2, cfg.act)
+        return (x, k_pages, v_pages), None
+
+    (x, k_pages, v_pages), _ = lax.scan(
+        body, (x, state.k_pages, state.v_pages),
+        (stacked, jnp.arange(n_layers)))
+    state = dataclasses.replace(state, k_pages=k_pages, v_pages=v_pages)
+    return _logits(cfg, params, x), state
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+class PagedEngine:
+    """Continuous-batching serve engine for uniform dense GQA stacks.
+
+    Host side owns only *policy* (which slot, which request — see
+    serve/scheduler.py) plus the paper's MTL VB lifecycle bookkeeping;
+    the per-token fast path is a single donated jit dispatch.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, n_pages: int = 256,
+                 page_size: int = 16, max_seqs: int = 8,
+                 max_pages_per_seq: Optional[int] = None,
+                 attn_impl: str = "gather", mtl: Optional[MTL] = None):
+        assert not cfg.local_global_period and not cfg.rglru_period \
+            and cfg.family in ("dense", "vlm"), \
+            "paged engine supports uniform GQA stacks"
+        assert attn_impl in ("gather", "kernel")
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_seqs = max_seqs
+        self.max_pages = max_pages_per_seq or -(-(n_pages - 1) // max_seqs)
+        self.mtl = mtl or MTL(PhysicalMemory(1 << 12))
+        self._vbid = [-1] * max_seqs
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
+                      "admits": 0, "releases": 0}
+        self.state = init_serve_state(
+            n_layers=cfg.n_layers, n_pages=n_pages, page_size=page_size,
+            n_kv=cfg.n_kv, head_dim=cfg.head_dim, max_seqs=max_seqs,
+            max_pages_per_seq=self.max_pages, dtype=jnp.float32)
+
+        def _decode(params, state, tokens, slot_mask):
+            return _token_step(cfg, self.max_pages, attn_impl, params,
+                               state, tokens, slot_mask)
+
+        def _prefill(params, state, tokens, n_tokens):
+            # tokens [S, C]; n_tokens [S] — valid prompt tokens this chunk.
+            def tok(st, c):
+                mask = (c < n_tokens) & st.slot_active
+                logits, st = _token_step(cfg, self.max_pages, attn_impl,
+                                         params, st, tokens[:, c], mask)
+                return st, logits
+            state, logits_seq = lax.scan(tok, state,
+                                         jnp.arange(tokens.shape[1]))
+            # last *valid* logits per slot (slots finish at different c)
+            last = jnp.clip(n_tokens - 1, 0)
+            logits = logits_seq[last, jnp.arange(tokens.shape[0])]
+            return logits, state
+
+        # the tentpole contract: ONE jitted dispatch per decode step,
+        # KV state donated so the pool is updated in place.
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+
+    # -- slot lifecycle (control path; device ops, host keeps no KV state) --
+    def admit(self, slot: int) -> None:
+        assert self._vbid[slot] == -1, "slot busy"
+        self._vbid[slot] = self.mtl.enable_vb(0, VBProps.KV_CACHE)
+        self.state = admit_slot(self.state, jnp.int32(slot))
+        self.stats["admits"] += 1
+
+    def evict(self, slot: int) -> None:
+        self.mtl.disable_vb(0, int(self._vbid[slot]))
+        self._vbid[slot] = -1
+        self.state = release_slot(self.state, jnp.int32(slot))
+        self.stats["releases"] += 1
+
+    # -- the fast paths ------------------------------------------------------
+    def decode(self, tokens: jax.Array, slot_mask: jax.Array) -> jax.Array:
+        """tokens [max_seqs] int32, slot_mask [max_seqs] bool →
+        logits [max_seqs, 1, vocab].  No host transfer happens here."""
+        logits, self.state = self._decode(self.params, self.state, tokens,
+                                          slot_mask)
+        self.stats["decode_steps"] += 1
+        return logits
+
+    def prefill_chunk(self, tokens: jax.Array, n_tokens: jax.Array
+                      ) -> jax.Array:
+        """tokens [max_seqs, C] int32, n_tokens [max_seqs] int32 →
+        logits [max_seqs, 1, vocab] at each slot's last fed position."""
+        logits, self.state = self._prefill(self.params, self.state, tokens,
+                                           n_tokens)
+        self.stats["prefill_chunks"] += 1
+        return logits
+
+    # -- introspection (syncs; never call on the decode fast path) ----------
+    @property
+    def free_pages(self) -> int:
+        return int(self.state.free_top)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - 1 - self.free_pages

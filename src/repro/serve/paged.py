@@ -10,8 +10,13 @@ Per decode step and layer:
 
 Sequences are ragged (per-sequence lengths/pages) — the continuous-batching
 path the dense serve/step.py cannot express.  Pallas kernels only lower on
-real TPUs, so this path runs interpret=True here and is exercised by
-examples/serve_paged.py and tests.
+real TPUs, so this path runs interpret=True here.
+
+NOTE: this is the LEGACY reference path.  It does B·L host→device calls and
+one host sync per decoded token — kept as the numerical oracle for
+serve/engine.py (tests/test_serve_engine.py), which folds the whole step
+into a single jitted dispatch.  New code should use
+:class:`repro.serve.engine.PagedEngine`.
 """
 from __future__ import annotations
 

@@ -1,0 +1,232 @@
+"""Continuous-batching scheduler over the jitted PagedEngine (host policy).
+
+The division of labour follows the VBI design: the device owns translation
+and allocation mechanics (page pool, free stack — see core/vbi/kvcache.py),
+the host owns *policy* only.  Crucially the host never reads device state on
+the token path — it mirrors page accounting arithmetically (a slot consumes
+a page exactly when its length crosses a page boundary), so admission,
+eviction and preemption decisions need zero syncs.
+
+Policies implemented:
+
+  * **admission** — a queued request is admitted when a slot is free and
+    the mirrored page budget covers its prompt plus one decode page; the
+    budget is *reserved* at admission so concurrent prefills can never
+    oversubscribe the device free stack;
+  * **chunked prefill** — admitted prompts are fed ``prefill_chunk`` tokens
+    per engine dispatch (one jit call per chunk, not per token), ragged
+    across slots;
+  * **eviction** — finished requests release their slot; the device pushes
+    the pages back on the free stack for immediate reuse;
+  * **preemption** — if a decode step would exhaust the pool, the youngest
+    running request is preempted: its pages are released and it re-enters
+    the queue with its generated prefix (recompute on re-admission).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import PagedEngine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+
+    @property
+    def tokens(self) -> List[int]:
+        return self.prompt + self.out
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    prefill_len: int        # tokens to prefill (snapshot at admission)
+    fed: int = 0            # tokens written into the KV so far
+    admit_seq: int = 0      # admission order (preemption picks the youngest)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < self.prefill_len
+
+
+class Scheduler:
+    def __init__(self, engine: PagedEngine, prefill_chunk: int = 8):
+        self.engine = engine
+        self.prefill_chunk = prefill_chunk
+        self.queue: Deque[Request] = deque()
+        self.slots: Dict[int, _SlotState] = {}
+        self.finished: List[Request] = []
+        self._next_rid = 0
+        self._admit_seq = 0
+        self._free_pages = engine.n_pages - 1      # host mirror, no syncs
+        self._reserved = [0] * engine.max_seqs     # pages reserved per slot
+        self.stats = {"preemptions": 0, "steps": 0}
+
+    # -- request intake ------------------------------------------------------
+    def add_request(self, prompt: List[int], max_new: int,
+                    rid: Optional[int] = None) -> int:
+        # lifetime length must fit one slot's page-table row — past it the
+        # device scatter would silently drop (KV corruption), so refuse now
+        lifetime = len(prompt) + max_new
+        cap = self.engine.max_pages * self.engine.page_size
+        if lifetime > cap:
+            raise ValueError(
+                f"request needs {lifetime} tokens > per-slot capacity "
+                f"{cap} (max_pages_per_seq={self.engine.max_pages} × "
+                f"page_size={self.engine.page_size})")
+        rid = self._next_rid if rid is None else rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.queue.append(Request(rid, list(prompt), max_new))
+        return rid
+
+    # -- page accounting (host mirror of the device free stack) --------------
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.engine.page_size)
+
+    def _budget_for(self, req: Request) -> int:
+        # prompt + one decode page of headroom keeps the first decode step
+        # from underflowing the stack right after admission.
+        return self._pages_for(len(req.tokens)) + 1
+
+    def _charge(self, slot: int, new_len: int) -> None:
+        """Grow the reservation to cover ``new_len`` tokens."""
+        need = self._pages_for(new_len)
+        if need > self._reserved[slot]:
+            self._free_pages -= need - self._reserved[slot]
+            self._reserved[slot] = need
+
+    def _release_accounting(self, slot: int) -> None:
+        self._free_pages += self._reserved[slot]
+        self._reserved[slot] = 0
+
+    # -- policy: admission / eviction / preemption ---------------------------
+    def _admit(self) -> None:
+        free_slots = [s for s in range(self.engine.max_seqs)
+                      if s not in self.slots]
+        while self.queue and free_slots and \
+                self._budget_for(self.queue[0]) <= self._free_pages:
+            req = self.queue.popleft()
+            slot = free_slots.pop(0)
+            self.engine.admit(slot)
+            self.slots[slot] = _SlotState(req, prefill_len=len(req.tokens),
+                                          admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            self._reserved[slot] = self._budget_for(req)
+            self._free_pages -= self._reserved[slot]
+
+    def _evict(self, slot: int) -> None:
+        st = self.slots.pop(slot)
+        self.engine.evict(slot)
+        self._release_accounting(slot)
+        self.finished.append(st.req)
+
+    def _preempt_one(self) -> bool:
+        """Release the youngest running slot back to the queue."""
+        if not self.slots:
+            return False
+        slot = max(self.slots, key=lambda s: self.slots[s].admit_seq)
+        st = self.slots.pop(slot)
+        self.engine.evict(slot)
+        self._release_accounting(slot)
+        st.req.preemptions += 1
+        self.queue.appendleft(st.req)    # keep its generated prefix
+        self.stats["preemptions"] += 1
+        return True
+
+    def _ensure_decode_budget(self, dec_slots: List[int]) -> None:
+        """Preempt until the mirrored budget covers every decode slot whose
+        next token opens a fresh page beyond its reservation."""
+        def pending_allocs() -> int:
+            return sum(
+                1 for s in dec_slots if s in self.slots and
+                self._pages_for(self.slots[s].fed + 1) > self._reserved[s])
+        while self.slots and pending_allocs() > self._free_pages:
+            if not self._preempt_one():
+                break
+
+    # -- one scheduler tick ---------------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit, prefill one chunk, decode one token; returns requests that
+        finished this tick."""
+        self.stats["steps"] += 1
+        self._admit()
+        done_before = len(self.finished)
+        S = self.engine.max_seqs
+
+        # 1. chunked prefill for slots still consuming their prompt
+        pre = {s: st for s, st in self.slots.items() if st.prefilling}
+        if pre:
+            C = self.prefill_chunk
+            toks = np.zeros((S, C), np.int32)
+            counts = np.zeros((S,), np.int32)
+            for s, st in pre.items():
+                seq = st.req.tokens
+                n = min(C, st.prefill_len - st.fed)
+                self._charge(s, st.fed + n)
+                toks[s, :n] = seq[st.fed:st.fed + n]
+                counts[s] = n
+            logits = self.engine.prefill_chunk(jnp.asarray(toks),
+                                               jnp.asarray(counts))
+            nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+            for s, st in pre.items():
+                st.fed += int(counts[s])
+                if not st.prefilling:          # prompt done → first token
+                    st.req.out.append(int(nxt[s]))
+
+        # 2. one decode step for slots past their prompt
+        dec_ids = [s for s, st in self.slots.items()
+                   if not st.prefilling and s not in pre]
+        if dec_ids:
+            self._ensure_decode_budget(dec_ids)
+            dec_ids = [s for s in dec_ids if s in self.slots]
+        if dec_ids:
+            toks = np.zeros((S,), np.int32)
+            mask = np.zeros((S,), bool)
+            for s in dec_ids:
+                st = self.slots[s]
+                toks[s] = st.req.tokens[-1]
+                mask[s] = True
+                self._charge(s, st.fed + 1)
+            logits = self.engine.decode(jnp.asarray(toks), jnp.asarray(mask))
+            nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+            for s in dec_ids:
+                st = self.slots[s]
+                st.fed += 1
+                st.req.out.append(int(nxt[s]))
+
+        # 3. eviction
+        for s in [s for s, st in self.slots.items()
+                  if len(st.req.out) >= st.req.max_new]:
+            self._evict(s)
+        return self.finished[done_before:]
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        """Drain queue + slots; returns all finished requests."""
+        for _ in range(max_steps):
+            if not self.queue and not self.slots:
+                break
+            self.step()
+            if self.queue and not self.slots:
+                # nothing running and the head request still can't be
+                # admitted — it can never fit this pool.
+                if self._budget_for(self.queue[0]) > self._free_pages:
+                    raise RuntimeError(
+                        f"request {self.queue[0].rid} needs "
+                        f"{self._budget_for(self.queue[0])} pages; pool has "
+                        f"{self._free_pages}")
+        if self.queue or self.slots:
+            raise RuntimeError(
+                f"run() exhausted {max_steps} steps with "
+                f"{len(self.queue)} queued and {len(self.slots)} running "
+                f"requests still unfinished")
+        return self.finished

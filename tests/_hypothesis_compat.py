@@ -1,0 +1,83 @@
+"""Fallback shim for ``hypothesis`` so the property-based seed tests degrade
+to deterministic fixed-example runs when the library isn't installed.
+
+Install the real thing (``pip install -r requirements-dev.txt``) to get
+actual property-based search + shrinking; this shim only covers the subset
+of the API the test-suite uses (``given``/``settings``/``strategies`` with
+integers, booleans, tuples, lists) and draws a fixed number of seeded
+pseudo-random examples per test.
+
+Usage in tests:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                       # pragma: no cover
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_EXAMPLES = 10
+MAX_EXAMPLES_CAP = 25        # fixed-example mode: keep CI time bounded
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:               # noqa: N801 — mimics the hypothesis module
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 31):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples=DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the decorated (given-wrapped) function."""
+    def deco(fn):
+        fn._compat_max_examples = min(max_examples, MAX_EXAMPLES_CAP)
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Runs the test body over N deterministic seeded examples."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            n = getattr(wrapped, "_compat_max_examples", DEFAULT_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(base + i)
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+        # hide the strategy-supplied params from pytest's fixture resolution
+        # (hypothesis does the same via its own signature rewrite)
+        del wrapped.__wrapped__
+        sig = inspect.signature(fn)
+        wrapped.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        return wrapped
+    return deco

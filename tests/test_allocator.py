@@ -1,6 +1,9 @@
 """Row-to-operand allocation invariants (Appendix B constraints)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to fixed-example runs
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.allocator import allocate_cell
 from repro.core.mig import Mig

@@ -3,7 +3,10 @@
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to fixed-example runs
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (OPS, ORACLES, PAPER_16, ControlUnit, BbopRequest,
                         apply_op, compare_to_ambit, get_uprogram, op_cost,
