@@ -1,17 +1,22 @@
 # CI entry points.  `make test` is the tier-1 verify command (ROADMAP.md);
-# `make bench-serve` exercises the continuous-batching serve engine and
-# reports its speedup over the legacy per-sequence path.
+# `make bench-serve` exercises the continuous-batching serve engine
+# (decode speedup over the legacy per-sequence path + the shared-prefix
+# cache workload) and writes machine-readable BENCH_serving.json at the
+# repo root so the serving trajectory is tracked PR over PR.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-serve bench serve-demo
+.PHONY: test bench-serve bench-serve-prefix bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_lm_serving --smoke
+
+bench-serve-prefix:
+	$(PYTHON) -m benchmarks.bench_lm_serving --smoke --workload shared-prefix
 
 bench:
 	$(PYTHON) -m benchmarks.run

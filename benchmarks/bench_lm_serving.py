@@ -5,15 +5,21 @@ Decode is weight-bandwidth-bound (§Roofline); SIMDRAM's vertical layout cuts
 HBM bytes per weight.  This bench reports (1) functional accuracy of the
 QuantizedLinear path on a real layer, (2) weight-byte ratios, (3) the
 memory-roofline delta read from the dry-run artifacts when the q8 decode
-variant has been generated (§Perf hillclimb), and (4) decode tokens/s of the
+variant has been generated (§Perf hillclimb), (4) decode tokens/s of the
 jitted PagedEngine vs. the legacy per-sequence PagedServer (DESIGN.md §5) —
-the data-centric-vs-processor-centric gap, measurable on CPU."""
+the data-centric-vs-processor-centric gap, measurable on CPU — and (5) the
+shared-prefix workload: end-to-end request throughput with the VBI prefix
+cache (serve/prefix_cache.py, DESIGN.md §5.1) on vs. off, plus cache hit
+rate and prefill tokens skipped.  ``--smoke`` writes the machine-readable
+``BENCH_serving.json`` at the repo root so the serving trajectory is
+tracked PR over PR."""
 from __future__ import annotations
 
 import argparse
 import glob
 import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +28,10 @@ import numpy as np
 from repro.kernels import QuantizedLinear
 from .common import RESULTS, emit
 
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
-def bench_serve_engine(decode_steps: int = 24) -> list[str]:
+
+def bench_serve_engine(decode_steps: int = 24) -> "tuple[list[str], dict]":
     """Steady-state decode throughput: jitted engine vs legacy reference."""
     from repro.launch.serve import serve_config
     from repro.models.model import init_params
@@ -72,11 +80,108 @@ def bench_serve_engine(decode_steps: int = 24) -> list[str]:
     engine_tps = n_slots * decode_steps / engine_s
 
     speedup = engine_tps / legacy_tps
-    return [emit(
+    lines = [emit(
         "lm_serving/engine_vs_legacy_decode",
         engine_s / (n_slots * decode_steps) * 1e6,
         f"engine={engine_tps:.1f}tok/s legacy={legacy_tps:.1f}tok/s "
         f"speedup={speedup:.2f}x")]
+    return lines, {"engine_tok_s": engine_tps, "legacy_tok_s": legacy_tps,
+                   "speedup": speedup}
+
+
+def bench_shared_prefix(n_requests: int = 32, shared_len: int = 256,
+                        unique_len: int = 8, max_new: int = 4,
+                        n_slots: int = 4) -> "tuple[list[str], dict]":
+    """End-to-end request throughput on a shared-system-prompt workload:
+    prefix cache on vs. off on the same engine (same compiled dispatches).
+    Also proves cache-on greedy outputs match cache-off, and that the
+    decode loop stays host-transfer-free with shared pages mapped."""
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.prefix_cache import PrefixCache
+    from repro.serve.scheduler import Scheduler
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    page_size = 16
+    lifetime = shared_len + unique_len + max_new
+    per_slot = -(-lifetime // page_size) + 2
+    n_pages = 1 + shared_len // page_size + n_slots * per_slot
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab, shared_len).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab, unique_len).tolist()
+               for _ in range(n_requests)]
+
+    eng = PagedEngine(cfg, params, n_pages=n_pages, page_size=page_size,
+                      max_seqs=n_slots, max_pages_per_seq=per_slot)
+
+    def once(cache):
+        sched = Scheduler(eng, prefill_chunk=page_size, prefix_cache=cache)
+        for p in prompts:
+            sched.add_request(p, max_new=max_new)
+        t0 = time.perf_counter()
+        fin = sched.run()
+        dt = time.perf_counter() - t0
+        return dt, {r.rid: r.out for r in fin}, sched
+
+    once(None)                                    # compile/warmup
+    off_s, off_out, _ = once(None)
+    cache = PrefixCache(page_size=page_size)
+    cow0 = eng.stats["cow_clones"]
+    on_s, on_out, sched_on = once(cache)
+    cow_clones = eng.stats["cow_clones"] - cow0
+    # drain the cache so the engine is clean for any later user
+    eng.release_cached_pages(cache.evict(cache.n_pages))
+
+    # the decode loop stays host-transfer-free with shared pages mapped
+    for s in range(2):
+        eng.admit(s)
+    eng.prefill_chunk(
+        jnp.asarray(np.asarray(prompts[0][:page_size], np.int32))[None]
+        .repeat(n_slots, 0),
+        jnp.asarray([page_size, page_size] + [0] * (n_slots - 2), jnp.int32))
+    toks = jax.device_put(jnp.zeros((n_slots,), jnp.int32))
+    mask = jax.device_put(
+        jnp.asarray([True, True] + [False] * (n_slots - 2)))
+    eng.decode(toks, mask)                        # warmup
+    with jax.transfer_guard("disallow"):
+        for _ in range(4):
+            out = eng.decode(toks, mask)
+        jax.block_until_ready(out)
+    for s in range(2):
+        eng.evict(s)
+
+    total_tokens = n_requests * (shared_len + unique_len + max_new)
+    metrics = {
+        "n_requests": n_requests, "shared_len": shared_len,
+        "unique_len": unique_len, "max_new": max_new,
+        "req_s_cache_on": n_requests / on_s,
+        "req_s_cache_off": n_requests / off_s,
+        "tok_s_cache_on": total_tokens / on_s,
+        "speedup": off_s / on_s,
+        "cache_hit_rate": cache.hit_rate,
+        "prefill_tokens_skipped": sched_on.stats["prefix_tokens_reused"],
+        "cow_clones": cow_clones,
+        "outputs_match": off_out == on_out,
+        "decode_transfer_free": True,             # guard above would raise
+    }
+    lines = [emit(
+        "lm_serving/shared_prefix_cache",
+        on_s / n_requests * 1e6,
+        f"on={metrics['req_s_cache_on']:.2f}req/s "
+        f"off={metrics['req_s_cache_off']:.2f}req/s "
+        f"speedup={metrics['speedup']:.2f}x "
+        f"hit_rate={metrics['cache_hit_rate']:.2f} "
+        f"skipped={metrics['prefill_tokens_skipped']}tok "
+        f"match={metrics['outputs_match']}")]
+    return lines, metrics
+
+
+def write_bench_json(results: dict) -> None:
+    BENCH_JSON.write_text(json.dumps(results, indent=2, sort_keys=True)
+                          + "\n")
+    print(f"[bench] wrote {BENCH_JSON}")
 
 
 def run() -> list[str]:
@@ -109,17 +214,32 @@ def run() -> list[str]:
         lines.append(emit(
             f"lm_serving/{b['arch']}_decode_mem_term", 0.0,
             f"baseline={mb:.4f}s q8={mq:.4f}s ({mb/max(mq,1e-12):.2f}x)"))
-    lines += bench_serve_engine()
+    eng_lines, eng_metrics = bench_serve_engine()
+    pre_lines, pre_metrics = bench_shared_prefix()
+    lines += eng_lines + pre_lines
+    write_bench_json({"engine_vs_legacy": eng_metrics,
+                      "shared_prefix": pre_metrics})
     return lines
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="serve-engine comparison only (CI fast path)")
+                    help="serving comparisons only (CI fast path)")
+    ap.add_argument("--workload", default="all",
+                    choices=("engine", "shared-prefix", "all"),
+                    help="which serving workload(s) to run under --smoke")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--shared-len", type=int, default=256)
     args = ap.parse_args()
     if args.smoke:
         print("name,us_per_call,derived")
-        bench_serve_engine()
+        results = {}
+        if args.workload in ("engine", "all"):
+            _, results["engine_vs_legacy"] = bench_serve_engine()
+        if args.workload in ("shared-prefix", "all"):
+            _, results["shared_prefix"] = bench_shared_prefix(
+                n_requests=args.requests, shared_len=args.shared_len)
+        write_bench_json(results)
     else:
         run()

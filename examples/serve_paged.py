@@ -1,10 +1,14 @@
 """VBI-paged serving demo: jitted continuous-batching decode with device-side
 delayed page allocation — the MTL managing the KV address space (DESIGN.md
-§2, engine architecture in §5).
+§2, engine architecture in §5) — and cross-request KV prefix sharing
+(serve/prefix_cache.py, §5.1).
 
     PYTHONPATH=src python examples/serve_paged.py --requests 6 --max-new 16
+    PYTHONPATH=src python examples/serve_paged.py --requests 8 \\
+        --shared-prefix 32 --max-new 8      # shared system prompt -> cache hits
 
-Pass ``--legacy`` for the per-sequence reference path (serve/paged.py).
+Pass ``--no-prefix-cache`` to disable sharing, ``--legacy`` for the
+per-sequence reference path (serve/paged.py).
 """
 import sys
 

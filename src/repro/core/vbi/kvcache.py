@@ -113,6 +113,11 @@ class PagedServeState:
         slot_active      : [max_seqs] bool
         free_stack       : [n_pages] int32 — free page ids in [0, free_top)
         free_top         : [] int32
+        page_refcounts   : [n_pages] int32 — mappers per page (slots + the
+                           prefix cache); a page returns to the free stack
+                           only when its count reaches zero, which is what
+                           lets requests share prompt pages read-only
+                           (``MTL.clone_vb`` semantics, DESIGN.md §5.1)
     """
     k_pages: jax.Array
     v_pages: jax.Array
@@ -121,10 +126,12 @@ class PagedServeState:
     slot_active: jax.Array
     free_stack: jax.Array
     free_top: jax.Array
+    page_refcounts: jax.Array
 
     def tree_flatten(self):
         return (self.k_pages, self.v_pages, self.page_table, self.seq_lens,
-                self.slot_active, self.free_stack, self.free_top), ()
+                self.slot_active, self.free_stack, self.free_top,
+                self.page_refcounts), ()
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
@@ -162,6 +169,7 @@ def init_serve_state(n_layers: int, n_pages: int, page_size: int, n_kv: int,
         slot_active=jnp.zeros((max_seqs,), bool),
         free_stack=jnp.arange(1, n_pages + 1, dtype=jnp.int32),
         free_top=jnp.asarray(n_pages - 1, jnp.int32),
+        page_refcounts=jnp.zeros((n_pages,), jnp.int32),
     )
 
 
@@ -169,36 +177,120 @@ def init_serve_state(n_layers: int, n_pages: int, page_size: int, n_kv: int,
 def admit_slot(state: PagedServeState, slot: jax.Array) -> PagedServeState:
     """Enable a VB for ``slot``: clears its translation row and length but
     allocates NOTHING — backing pages arrive on first dirty writeback."""
-    return PagedServeState(
-        state.k_pages, state.v_pages,
-        state.page_table.at[slot].set(0),
-        state.seq_lens.at[slot].set(0),
-        state.slot_active.at[slot].set(True),
-        state.free_stack, state.free_top)
+    return dataclasses.replace(
+        state,
+        page_table=state.page_table.at[slot].set(0),
+        seq_lens=state.seq_lens.at[slot].set(0),
+        slot_active=state.slot_active.at[slot].set(True))
 
 
 @partial(jax.jit, donate_argnums=(0,))
 def release_slot(state: PagedServeState, slot: jax.Array) -> PagedServeState:
-    """Disable ``slot``'s VB: push its backing pages onto the free stack."""
+    """Disable ``slot``'s VB: drop one reference on every mapped page and
+    push only the pages whose refcount reaches zero onto the free stack —
+    pages shared with other slots or retained by the prefix cache survive.
+    Releasing an already-released slot (seq_lens == 0) is a no-op."""
     ps = state.page_size
-    # clamp: a slot can never own more pages than its table row holds,
+    # clamp: a slot can never map more pages than its table row holds,
     # even if seq_lens was driven past capacity by a buggy caller
-    n_owned = jnp.minimum(-(-state.seq_lens[slot] // ps),
-                          state.max_pages_per_seq)
+    n_mapped = jnp.minimum(-(-state.seq_lens[slot] // ps),
+                           state.max_pages_per_seq)
     idx = jnp.arange(state.max_pages_per_seq)
-    owned = idx < n_owned
-    # scatter owned pages to [free_top, free_top + n_owned); unowned lanes
+    mapped = idx < n_mapped
+    pages = state.page_table[slot]
+    refc = state.page_refcounts.at[
+        jnp.where(mapped, pages, state.n_pages)].add(-1, mode="drop")
+    freed = mapped & (refc[pages] <= 0)
+    # scatter freed pages to [free_top, free_top + n_freed); other lanes
     # get an out-of-range index and are dropped.
-    dst = jnp.where(owned, state.free_top + jnp.cumsum(owned) - 1,
+    dst = jnp.where(freed, state.free_top + jnp.cumsum(freed) - 1,
                     state.free_stack.shape[0])
-    free_stack = state.free_stack.at[dst].set(state.page_table[slot],
-                                              mode="drop")
-    return PagedServeState(
-        state.k_pages, state.v_pages,
-        state.page_table.at[slot].set(0),
-        state.seq_lens.at[slot].set(0),
-        state.slot_active.at[slot].set(False),
-        free_stack, state.free_top + n_owned)
+    free_stack = state.free_stack.at[dst].set(pages, mode="drop")
+    return dataclasses.replace(
+        state,
+        page_table=state.page_table.at[slot].set(0),
+        seq_lens=state.seq_lens.at[slot].set(0),
+        slot_active=state.slot_active.at[slot].set(False),
+        free_stack=free_stack,
+        free_top=state.free_top + freed.sum(dtype=jnp.int32),
+        page_refcounts=jnp.maximum(refc, 0))
+
+
+# --------------------------------------------------------------------------
+# prefix sharing: refcounted read-only mapping + copy-on-write clone
+# (the serve-path re-instantiation of MTL.clone_vb — DESIGN.md §5.1)
+# --------------------------------------------------------------------------
+@partial(jax.jit, donate_argnums=(0,))
+def map_prefix(state: PagedServeState, slot: jax.Array, page_ids: jax.Array,
+               n_shared: jax.Array, n_tokens: jax.Array) -> PagedServeState:
+    """Map ``page_ids[:n_shared]`` (already-filled prompt pages) read-only
+    into ``slot``'s page table and set its length to ``n_tokens`` — one
+    device scatter, no recompute, no allocation.  Each mapped page gains a
+    reference; the slot never writes them (its next write position is the
+    page boundary at ``n_tokens``)."""
+    idx = jnp.arange(state.max_pages_per_seq)
+    shared = idx < n_shared
+    refc = state.page_refcounts.at[
+        jnp.where(shared, page_ids, state.n_pages)].add(1, mode="drop")
+    return dataclasses.replace(
+        state,
+        page_table=state.page_table.at[slot].set(
+            jnp.where(shared, page_ids, 0)),
+        seq_lens=state.seq_lens.at[slot].set(n_tokens),
+        slot_active=state.slot_active.at[slot].set(True),
+        page_refcounts=refc)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def clone_page_cow(state: PagedServeState, slot: jax.Array,
+                   page_idx: jax.Array, src_page: jax.Array,
+                   new_len: jax.Array) -> PagedServeState:
+    """Copy-on-write break for a *partially* shared page: pop a fresh page,
+    copy ``src_page``'s K/V into it, install it at
+    ``page_table[slot, page_idx]`` and set the slot's length to ``new_len``
+    (the matched token count).  The source page keeps its references (the
+    cache still owns it); the clone belongs to the slot, which overwrites
+    the unmatched tail as prefill proceeds — ``MTL.clone_vb`` + the COW
+    break of ``MTL.writeback``, fused into one jitted device op."""
+    dst = state.free_stack[state.free_top - 1]
+    return dataclasses.replace(
+        state,
+        k_pages=state.k_pages.at[:, dst].set(state.k_pages[:, src_page]),
+        v_pages=state.v_pages.at[:, dst].set(state.v_pages[:, src_page]),
+        page_table=state.page_table.at[slot, page_idx].set(dst),
+        seq_lens=state.seq_lens.at[slot].set(new_len),
+        free_top=state.free_top - 1,
+        page_refcounts=state.page_refcounts.at[dst].set(1))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def retain_pages(state: PagedServeState, page_ids: jax.Array,
+                 n: jax.Array) -> PagedServeState:
+    """Add one reference to ``page_ids[:n]`` — the prefix cache taking
+    custody of freshly prefilled prompt pages so they outlive the slot."""
+    idx = jnp.arange(page_ids.shape[0])
+    refc = state.page_refcounts.at[
+        jnp.where(idx < n, page_ids, state.n_pages)].add(1, mode="drop")
+    return dataclasses.replace(state, page_refcounts=refc)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def release_pages(state: PagedServeState, page_ids: jax.Array,
+                  n: jax.Array) -> PagedServeState:
+    """Drop one reference on ``page_ids[:n]`` (prefix-cache eviction);
+    pages reaching refcount zero return to the free stack."""
+    idx = jnp.arange(page_ids.shape[0])
+    held = idx < n
+    refc = state.page_refcounts.at[
+        jnp.where(held, page_ids, state.n_pages)].add(-1, mode="drop")
+    freed = held & (refc[page_ids] <= 0)
+    dst = jnp.where(freed, state.free_top + jnp.cumsum(freed) - 1,
+                    state.free_stack.shape[0])
+    return dataclasses.replace(
+        state,
+        free_stack=state.free_stack.at[dst].set(page_ids, mode="drop"),
+        free_top=state.free_top + freed.sum(dtype=jnp.int32),
+        page_refcounts=jnp.maximum(refc, 0))
 
 
 def reserve_positions(state: PagedServeState, slot_mask: jax.Array
@@ -223,12 +315,14 @@ def reserve_positions(state: PagedServeState, slot_mask: jax.Array
     cur = state.page_table[rows, page_idx]
     page_table = state.page_table.at[rows, page_idx].set(
         jnp.where(needs, new_pages, cur))
-    return PagedServeState(
-        state.k_pages, state.v_pages, page_table,
-        positions + slot_mask.astype(jnp.int32),
-        state.slot_active,
-        state.free_stack,
-        state.free_top - needs.sum(dtype=jnp.int32)), positions
+    # a freshly popped page starts with exactly one mapper (its slot)
+    refc = state.page_refcounts.at[
+        jnp.where(needs, new_pages, state.n_pages)].set(1, mode="drop")
+    return dataclasses.replace(
+        state, page_table=page_table,
+        seq_lens=positions + slot_mask.astype(jnp.int32),
+        free_top=state.free_top - needs.sum(dtype=jnp.int32),
+        page_refcounts=refc), positions
 
 
 def write_token_kv(k_pages: jax.Array, v_pages: jax.Array, layer,
@@ -287,6 +381,8 @@ class PagedKVManager:
             self.state.seq_lens.at[seq_idx].set(0))
 
     def release_seq(self, seq_idx: int) -> None:
+        if self.seq_class[seq_idx] == -1:      # double release is a no-op
+            return
         for p in self.seq_pages[seq_idx]:
             self.free_pages.append(p)
             self.stats["released_pages"] += 1

@@ -1,12 +1,16 @@
 """Serving launcher: jitted continuous-batching over the VBI-paged engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --requests 6 --max-new 24
+        --requests 6 --max-new 24 --shared-prefix 32
 
 Default path: serve/engine.py (single jitted decode dispatch, device-side
 delayed page allocation) driven by serve/scheduler.py (admission, chunked
-prefill, eviction, preemption).  ``--legacy`` runs the per-sequence
-reference path (serve/paged.py) for comparison.
+prefill, eviction, preemption) with the VBI prefix cache enabled
+(serve/prefix_cache.py — cross-request KV page sharing, DESIGN.md §5.1;
+disable with ``--no-prefix-cache``).  ``--shared-prefix N`` prepends an
+N-token system prompt to every request so the sharing is visible in the
+stats.  ``--legacy`` runs the per-sequence reference path (serve/paged.py)
+for comparison.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config, smoke_config
 from ..models.model import init_params
 from ..serve.engine import PagedEngine
+from ..serve.prefix_cache import PrefixCache
 from ..serve.scheduler import Scheduler
 
 
@@ -44,6 +49,11 @@ def main(argv=None) -> None:
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=4)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="shared system-prompt tokens prepended to every "
+                         "request (exercises the prefix cache)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request KV page sharing")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="per-sequence reference path (serve/paged.py)")
@@ -52,25 +62,34 @@ def main(argv=None) -> None:
     cfg = serve_config(args.arch, args.smoke)
     params = init_params(cfg, jax.random.key(args.seed))
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, cfg.vocab, args.prompt_len).tolist()
+    system = rng.integers(0, cfg.vocab, args.shared_prefix).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab, args.prompt_len).tolist()
                for _ in range(args.requests)]
 
     t0 = time.time()
     if args.legacy:
         decoded = _run_legacy(cfg, params, prompts, args)
     else:
+        page_size = 8
         engine = PagedEngine(
-            cfg, params, n_pages=1 + args.batch_slots * 32, page_size=8,
-            max_seqs=args.batch_slots)
-        sched = Scheduler(engine, prefill_chunk=args.prefill_chunk)
+            cfg, params, page_size=page_size, max_seqs=args.batch_slots,
+            n_pages=1 + args.batch_slots * (32 + args.shared_prefix
+                                            // page_size))
+        cache = (None if args.no_prefix_cache
+                 else PrefixCache(page_size=page_size))
+        sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
+                          prefix_cache=cache)
         for p in prompts:
             sched.add_request(p, max_new=args.max_new)
         for req in sched.run():
             print(f"[serve] req {req.rid} done: "
-                  f"{req.prompt} -> {req.out[:8]}...")
-        decoded = args.requests * (args.prompt_len + args.max_new)
+                  f"{req.prompt[-4:]} -> {req.out[:8]}...")
+        decoded = args.requests * (len(prompts[0]) + args.max_new)
         print(f"[serve] engine stats {engine.stats} "
               f"sched stats {sched.stats}")
+        if cache is not None:
+            print(f"[serve] prefix cache: hit_rate={cache.hit_rate:.2f} "
+                  f"stats {cache.stats}")
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {decoded} token-steps in "
           f"{dt:.1f}s ({decoded / dt:.1f} tok/s)")

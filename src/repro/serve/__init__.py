@@ -1,6 +1,8 @@
 from .engine import PagedEngine, batched_paged_attention
+from .prefix_cache import PrefixCache, PrefixMatch
 from .scheduler import Request, Scheduler
 from .step import make_decode_step, make_prefill_step
 
 __all__ = ["make_prefill_step", "make_decode_step", "PagedEngine",
-           "batched_paged_attention", "Scheduler", "Request"]
+           "batched_paged_attention", "Scheduler", "Request",
+           "PrefixCache", "PrefixMatch"]

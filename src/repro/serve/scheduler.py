@@ -12,15 +12,25 @@ Policies implemented:
   * **admission** — a queued request is admitted when a slot is free and
     the mirrored page budget covers its prompt plus one decode page; the
     budget is *reserved* at admission so concurrent prefills can never
-    oversubscribe the device free stack;
+    oversubscribe the device free stack.  With a :class:`PrefixCache`
+    attached, admission first looks up the longest cached prefix, maps
+    those pages read-only into the slot (no recompute) and budgets only
+    the uncached suffix — shared pages are the cache's to free, never the
+    slot's;
   * **chunked prefill** — admitted prompts are fed ``prefill_chunk`` tokens
     per engine dispatch (one jit call per chunk, not per token), ragged
-    across slots;
-  * **eviction** — finished requests release their slot; the device pushes
-    the pages back on the free stack for immediate reuse;
+    across slots; when a prompt finishes prefilling, its full pages are
+    inserted into the prefix cache (custody moves from the slot's
+    reservation to the cache ledger — the mirror stays exact);
+  * **eviction** — finished requests release their slot; the device frees
+    only pages whose refcount reaches zero, so cached prompt pages
+    survive for the next request.  Cold cached prefixes are evicted LRU
+    when admission or decode needs pages (before any preemption);
   * **preemption** — if a decode step would exhaust the pool, the youngest
-    running request is preempted: its pages are released and it re-enters
-    the queue with its generated prefix (recompute on re-admission).
+    running request is preempted: its generated tokens stay on the request
+    (greedy resume is bit-identical — see the regression test), its fed
+    prefix is saved into the prefix cache, and on re-admission it restores
+    from the cache instead of re-prefilling from token zero.
 """
 from __future__ import annotations
 
@@ -32,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import PagedEngine
+from .prefix_cache import PrefixCache, PrefixMatch, _Node
 
 
 @dataclasses.dataclass
@@ -51,8 +62,10 @@ class Request:
 class _SlotState:
     req: Request
     prefill_len: int        # tokens to prefill (snapshot at admission)
-    fed: int = 0            # tokens written into the KV so far
+    fed: int = 0            # tokens written/mapped into the KV so far
     admit_seq: int = 0      # admission order (preemption picks the youngest)
+    inserted: bool = False  # prompt pages already offered to the cache
+    pinned: List[_Node] = dataclasses.field(default_factory=list)
 
     @property
     def prefilling(self) -> bool:
@@ -60,9 +73,13 @@ class _SlotState:
 
 
 class Scheduler:
-    def __init__(self, engine: PagedEngine, prefill_chunk: int = 8):
+    def __init__(self, engine: PagedEngine, prefill_chunk: int = 8,
+                 prefix_cache: Optional[PrefixCache] = None):
+        if prefix_cache is not None:
+            assert prefix_cache.page_size == engine.page_size
         self.engine = engine
         self.prefill_chunk = prefill_chunk
+        self.prefix_cache = prefix_cache
         self.queue: Deque[Request] = deque()
         self.slots: Dict[int, _SlotState] = {}
         self.finished: List[Request] = []
@@ -70,7 +87,12 @@ class Scheduler:
         self._admit_seq = 0
         self._free_pages = engine.n_pages - 1      # host mirror, no syncs
         self._reserved = [0] * engine.max_seqs     # pages reserved per slot
-        self.stats = {"preemptions": 0, "steps": 0}
+        # pages in a slot's span NOT owned by its reservation: mapped-shared
+        # at admission + own pages whose custody moved to the prefix cache
+        self._shared = [0] * engine.max_seqs
+        # (COW clones are counted by the engine: stats["cow_clones"])
+        self.stats = {"preemptions": 0, "steps": 0, "prefix_hits": 0,
+                      "prefix_tokens_reused": 0, "cache_evicted_pages": 0}
 
     # -- request intake ------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int,
@@ -93,14 +115,16 @@ class Scheduler:
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.engine.page_size)
 
-    def _budget_for(self, req: Request) -> int:
+    def _budget_for(self, req: Request, n_shared: int = 0) -> int:
         # prompt + one decode page of headroom keeps the first decode step
-        # from underflowing the stack right after admission.
-        return self._pages_for(len(req.tokens)) + 1
+        # from underflowing the stack right after admission; pages mapped
+        # from the prefix cache are not the slot's to allocate or free.
+        return self._pages_for(len(req.tokens)) + 1 - n_shared
 
     def _charge(self, slot: int, new_len: int) -> None:
-        """Grow the reservation to cover ``new_len`` tokens."""
-        need = self._pages_for(new_len)
+        """Grow the reservation to cover ``new_len`` tokens (minus pages in
+        the span that the cache, not this slot, owns)."""
+        need = self._pages_for(new_len) - self._shared[slot]
         if need > self._reserved[slot]:
             self._free_pages -= need - self._reserved[slot]
             self._reserved[slot] = need
@@ -108,34 +132,118 @@ class Scheduler:
     def _release_accounting(self, slot: int) -> None:
         self._free_pages += self._reserved[slot]
         self._reserved[slot] = 0
+        self._shared[slot] = 0
+
+    # -- prefix cache custody ------------------------------------------------
+    def _evict_cache(self, want_pages: int) -> int:
+        """LRU-drop cold cached prefixes to reclaim ``want_pages``.  Only
+        unpinned nodes are dropped, so each page's device refcount is
+        exactly 1 and the mirror can count it freed without a sync."""
+        if self.prefix_cache is None or want_pages <= 0:
+            return 0
+        pages = self.prefix_cache.evict(want_pages)
+        if pages:
+            self.engine.release_cached_pages(pages)
+            self._free_pages += len(pages)
+            self.stats["cache_evicted_pages"] += len(pages)
+        return len(pages)
+
+    def _cache_insert(self, slot: int, st: _SlotState) -> None:
+        """Offer ``slot``'s fully-written pages (prompt, or fed prefix at
+        preemption) to the cache.  Newly cached pages move from the slot's
+        reservation to cache custody: the device will not free them at
+        release (the cache holds a reference), so the mirror must not add
+        them back either."""
+        if self.prefix_cache is None:
+            return
+        n_full = st.fed // self.engine.page_size
+        if n_full == 0:
+            return
+        pages = self.engine.read_page_row(slot, n_full)   # control-path sync
+        new_nodes = self.prefix_cache.insert(st.req.tokens, pages)
+        if new_nodes:
+            self.engine.retain_pages([n.page for n in new_nodes])
+            self.prefix_cache.pin(new_nodes)
+            st.pinned.extend(new_nodes)
+            self._reserved[slot] -= len(new_nodes)
+            self._shared[slot] += len(new_nodes)
+
+    def _unpin(self, st: _SlotState) -> None:
+        if self.prefix_cache is not None and st.pinned:
+            self.prefix_cache.unpin(st.pinned)
+            st.pinned = []
 
     # -- policy: admission / eviction / preemption ---------------------------
     def _admit(self) -> None:
         free_slots = [s for s in range(self.engine.max_seqs)
                       if s not in self.slots]
-        while self.queue and free_slots and \
-                self._budget_for(self.queue[0]) <= self._free_pages:
-            req = self.queue.popleft()
+        while self.queue and free_slots:
+            req = self.queue[0]
+            match: Optional[PrefixMatch] = None
+            if self.prefix_cache is not None:
+                match = self.prefix_cache.lookup(req.tokens)
+                # pin before any eviction so the matched pages can't be
+                # reclaimed out from under the mapping we're about to make
+                self.prefix_cache.pin(match.all_nodes())
+            budget = self._budget_for(req, len(match.pages) if match else 0)
+            if budget > self._free_pages:
+                self._evict_cache(budget - self._free_pages)
+            if budget > self._free_pages and match is not None \
+                    and match.partial_node is not None:
+                # the pinned COW source may itself be the page we need
+                # back: losing a < page_size prefill shortcut beats never
+                # admitting (and run()'s impossibility check counts this
+                # page as evictable, so holding it would livelock)
+                self.prefix_cache.unpin([match.partial_node])
+                self.prefix_cache.drop_partial(match)
+                self._evict_cache(budget - self._free_pages)
+            if budget > self._free_pages:
+                if match is not None:
+                    self.prefix_cache.unpin(match.all_nodes())
+                break
+            self.queue.popleft()
             slot = free_slots.pop(0)
             self.engine.admit(slot)
-            self.slots[slot] = _SlotState(req, prefill_len=len(req.tokens),
-                                          admit_seq=self._admit_seq)
+            st = _SlotState(req, prefill_len=len(req.tokens),
+                            admit_seq=self._admit_seq)
             self._admit_seq += 1
-            self._reserved[slot] = self._budget_for(req)
-            self._free_pages -= self._reserved[slot]
+            if match is not None and match.n_tokens:
+                ps = self.engine.page_size
+                if match.pages:
+                    self.engine.map_prefix(slot, match.pages,
+                                           len(match.pages) * ps)
+                if match.partial_len:
+                    self.engine.clone_cow(slot, len(match.pages),
+                                          match.partial_page, match.n_tokens)
+                st.fed = match.n_tokens
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_tokens_reused"] += match.n_tokens
+            if match is not None:
+                self.prefix_cache.record(match, len(req.tokens))
+                st.pinned.extend(match.all_nodes())
+            self.slots[slot] = st
+            self._shared[slot] = len(match.pages) if match else 0
+            self._reserved[slot] = budget
+            self._free_pages -= budget
 
     def _evict(self, slot: int) -> None:
         st = self.slots.pop(slot)
+        self._unpin(st)
         self.engine.evict(slot)
         self._release_accounting(slot)
         self.finished.append(st.req)
 
     def _preempt_one(self) -> bool:
-        """Release the youngest running slot back to the queue."""
+        """Release the youngest running slot back to the queue.  Its fed
+        prefix (prompt + generated tokens) is saved into the prefix cache
+        first, so re-admission restores by mapping pages instead of
+        re-prefilling from token zero."""
         if not self.slots:
             return False
         slot = max(self.slots, key=lambda s: self.slots[s].admit_seq)
         st = self.slots.pop(slot)
+        self._cache_insert(slot, st)
+        self._unpin(st)
         self.engine.evict(slot)
         self._release_accounting(slot)
         st.req.preemptions += 1
@@ -144,13 +252,17 @@ class Scheduler:
         return True
 
     def _ensure_decode_budget(self, dec_slots: List[int]) -> None:
-        """Preempt until the mirrored budget covers every decode slot whose
-        next token opens a fresh page beyond its reservation."""
+        """Evict cold cached prefixes, then preempt, until the mirrored
+        budget covers every decode slot whose next token opens a fresh page
+        beyond its reservation."""
         def pending_allocs() -> int:
             return sum(
                 1 for s in dec_slots if s in self.slots and
-                self._pages_for(self.slots[s].fed + 1) > self._reserved[s])
+                self._pages_for(self.slots[s].fed + 1) - self._shared[s]
+                > self._reserved[s])
         while self.slots and pending_allocs() > self._free_pages:
+            if self._evict_cache(pending_allocs() - self._free_pages):
+                continue
             if not self._preempt_one():
                 break
 
@@ -181,6 +293,9 @@ class Scheduler:
             for s, st in pre.items():
                 st.fed += int(counts[s])
                 if not st.prefilling:          # prompt done → first token
+                    if not st.inserted:        # share the prompt's KV pages
+                        self._cache_insert(s, st)
+                        st.inserted = True
                     st.req.out.append(int(nxt[s]))
 
         # 2. one decode step for slots past their prompt
@@ -217,13 +332,18 @@ class Scheduler:
                 break
             self.step()
             if self.queue and not self.slots:
-                # nothing running and the head request still can't be
-                # admitted — it can never fit this pool.
-                if self._budget_for(self.queue[0]) > self._free_pages:
+                # nothing running and the head request still couldn't be
+                # admitted by step()'s _admit pass (which already tried
+                # cache eviction) — it can never fit this pool.
+                evictable = (self.prefix_cache.evictable_pages
+                             if self.prefix_cache else 0)
+                if self._budget_for(self.queue[0]) > \
+                        self._free_pages + evictable:
                     raise RuntimeError(
                         f"request {self.queue[0].rid} needs "
                         f"{self._budget_for(self.queue[0])} pages; pool has "
-                        f"{self._free_pages}")
+                        f"{self._free_pages} free + {evictable} evictable "
+                        f"cached")
         if self.queue or self.slots:
             raise RuntimeError(
                 f"run() exhausted {max_steps} steps with "

@@ -1,0 +1,316 @@
+"""The VBI prefix cache (serve/prefix_cache.py + kvcache sharing ops):
+
+  * trie semantics: longest-prefix match, the always-prefill-one-token cap,
+    partial matches, insert dedup, LRU eviction honouring pins;
+  * device refcounts: shared pages are freed only at refcount zero,
+    double release is a no-op, COW clones pop exactly one page;
+  * equivalence: cache-on logits/outputs match cache-off byte for byte
+    (engine level and scheduler level);
+  * preemption: greedy outputs are bit-identical with and without
+    preemption, and a resumed request restores from the cache instead of
+    re-prefilling from token zero;
+  * a full admit → share → COW → release → drain cycle returns every page
+    (pages_in_use == 0) with the host mirror exact throughout.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vbi.kvcache import (init_serve_state, map_prefix,
+                                    release_pages, release_slot,
+                                    retain_pages)
+from repro.launch.serve import serve_config
+from repro.models.model import init_params
+from repro.serve.engine import PagedEngine
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+# --------------------------------------------------------------------------
+# host trie
+# --------------------------------------------------------------------------
+def test_trie_lookup_insert_and_cap():
+    c = PrefixCache(page_size=4)
+    toks = [1, 2, 3, 4, 5, 6, 7, 8, 9]
+    new = c.insert(toks, [10, 11])               # pages for toks[0:4], [4:8]
+    assert [n.page for n in new] == [10, 11]
+    assert c.n_pages == 2
+    # full lookup of the same 9 tokens: both pages match (8 < 9-1 cap ok)
+    m = c.lookup(toks)
+    assert m.pages == [10, 11] and m.n_tokens == 8 and m.partial_len == 0
+    # 8-token prompt: matching both pages would leave nothing to prefill —
+    # the second page degrades to a 3-token partial match (cap = len-1)
+    m = c.lookup(toks[:8])
+    assert m.pages == [10] and m.partial_page == 11 and m.partial_len == 3
+    assert m.n_tokens == 7
+    # diverging suffix: one full page + partial match of the second
+    m = c.lookup([1, 2, 3, 4, 5, 6, 99, 99, 99])
+    assert m.pages == [10] and m.partial_page == 11 and m.partial_len == 2
+    # no match at all
+    assert c.lookup([9, 9, 9, 9, 9]).n_tokens == 0
+    # re-insert dedups: first writer wins, no new nodes
+    assert c.insert(toks, [20, 21]) == []
+    assert c.lookup(toks).pages == [10, 11]
+
+
+def test_trie_eviction_lru_pins_and_cascade():
+    c = PrefixCache(page_size=2)
+    c.insert([1, 2, 3, 4], [5, 6])               # chain: 5 -> 6
+    c.insert([7, 8], [9])                        # independent leaf: 9
+    m = c.lookup([1, 2, 3, 4, 0])
+    c.pin(m.all_nodes())                         # 5, 6 in active use
+    # 9 is the only unpinned node; a parent (5) can only go after its child
+    assert c.evict(10) == [9]
+    assert c.evictable_pages == 0
+    c.unpin(m.all_nodes())
+    # cascade: leaf 6 first, then its parent 5
+    assert c.evict(10) == [6, 5]
+    assert c.n_pages == 0
+
+
+# --------------------------------------------------------------------------
+# device refcounts (pure PagedServeState ops)
+# --------------------------------------------------------------------------
+def _tiny_state():
+    state = init_serve_state(n_layers=1, n_pages=9, page_size=2, n_kv=1,
+                             head_dim=2, max_seqs=3, max_pages_per_seq=4)
+    # pretend the pages the tests hand-map below were already popped, so
+    # releasing them doesn't double-represent them on the free stack
+    return dataclasses.replace(state, free_top=jnp.asarray(4, jnp.int32))
+
+
+def test_shared_pages_freed_only_at_refcount_zero():
+    state = _tiny_state()
+    ids = jnp.asarray([5, 3, 0, 0], jnp.int32)
+    # two slots map the same two pages read-only (4 tokens = 2 full pages)
+    state = map_prefix(state, jnp.int32(0), ids, jnp.int32(2), jnp.int32(4))
+    state = map_prefix(state, jnp.int32(1), ids, jnp.int32(2), jnp.int32(4))
+    np.testing.assert_array_equal(np.asarray(state.page_refcounts)[[5, 3]],
+                                  [2, 2])
+    top0 = int(state.free_top)
+    state = release_slot(state, jnp.int32(0))
+    assert int(state.free_top) == top0          # still mapped by slot 1
+    np.testing.assert_array_equal(np.asarray(state.page_refcounts)[[5, 3]],
+                                  [1, 1])
+    state = release_slot(state, jnp.int32(1))
+    assert int(state.free_top) == top0 + 2      # refcount zero -> freed
+    np.testing.assert_array_equal(
+        np.asarray(state.free_stack[top0:top0 + 2]), [5, 3])
+
+
+def test_double_release_slot_is_noop():
+    state = _tiny_state()
+    ids = jnp.asarray([7, 0, 0, 0], jnp.int32)
+    state = map_prefix(state, jnp.int32(0), ids, jnp.int32(1), jnp.int32(2))
+    state = release_slot(state, jnp.int32(0))
+    top, refc = int(state.free_top), np.asarray(state.page_refcounts)
+    state = release_slot(state, jnp.int32(0))   # second release: no-op
+    assert int(state.free_top) == top
+    np.testing.assert_array_equal(np.asarray(state.page_refcounts), refc)
+
+
+def test_cache_retain_release_pages():
+    state = _tiny_state()
+    ids = jnp.asarray([4, 6, 0, 0], jnp.int32)
+    state = map_prefix(state, jnp.int32(0), ids, jnp.int32(2), jnp.int32(4))
+    state = retain_pages(state, ids, jnp.int32(2))      # cache custody
+    state = release_slot(state, jnp.int32(0))
+    top = int(state.free_top)
+    np.testing.assert_array_equal(np.asarray(state.page_refcounts)[[4, 6]],
+                                  [1, 1])                # cache keeps them
+    state = release_pages(state, ids, jnp.int32(2))      # cache eviction
+    assert int(state.free_top) == top + 2
+    np.testing.assert_array_equal(np.asarray(state.page_refcounts)[[4, 6]],
+                                  [0, 0])
+
+
+def test_kv_manager_double_release_is_noop(setup):
+    from repro.core.vbi.kvcache import PagedKVManager
+    mgr = PagedKVManager(n_layers=1, n_pages=8, page_size=2, n_kv=1,
+                         head_dim=2, max_seqs=2)
+    mgr.new_seq(0)
+    mgr.ensure_capacity(0, 3)
+    assert mgr.pages_in_use == 2
+    mgr.release_seq(0)
+    assert mgr.pages_in_use == 0
+    mgr.release_seq(0)                          # double release: no-op
+    assert mgr.pages_in_use == 0
+    mgr.new_seq(0)                              # slot is reusable after
+
+
+# --------------------------------------------------------------------------
+# engine-level equivalence: mapped prefix + COW == full prefill
+# --------------------------------------------------------------------------
+def test_cached_prefill_logits_match_full_prefill(setup):
+    cfg, params = setup
+    eng = PagedEngine(cfg, params, n_pages=32, page_size=4, max_seqs=3,
+                      max_pages_per_seq=4)
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3], np.int32)  # 10 toks
+    S, C = 3, len(prompt)
+
+    def feed(slot, toks):
+        t = np.zeros((S, C), np.int32)
+        n = np.zeros((S,), np.int32)
+        t[slot, :len(toks)] = toks
+        n[slot] = len(toks)
+        return eng.prefill_chunk(jnp.asarray(t), jnp.asarray(n))
+
+    # slot 0: full prefill (the oracle); its 2 full pages become "cached"
+    eng.admit(0)
+    feed(0, prompt)
+    pages = eng.read_page_row(0, 2)
+    eng.retain_pages(pages)
+
+    # slot 1: map both full pages, prefill only the 2-token suffix
+    eng.admit(1)
+    eng.map_prefix(1, pages, 8)
+    feed(1, prompt[8:])
+
+    # slot 2: map page 0, COW-clone page 1 at 3 of 4 tokens, prefill rest
+    eng.admit(2)
+    eng.map_prefix(2, pages[:1], 4)
+    eng.clone_cow(2, 1, pages[1], 7)
+    feed(2, prompt[7:])
+
+    np.testing.assert_array_equal(np.asarray(eng.state.seq_lens[:3]),
+                                  [10, 10, 10])
+    # identical histories -> identical decode logits, and the decode loop
+    # stays host-transfer-free with shared pages mapped (tentpole contract)
+    toks = jax.device_put(jnp.full((S,), 7, jnp.int32))
+    mask = jax.device_put(jnp.ones((S,), bool))
+    logits = eng.decode(toks, mask)             # compile/warmup
+    with jax.transfer_guard("disallow"):
+        logits = eng.decode(toks, mask)
+        jax.block_until_ready(logits)
+    out = np.asarray(logits)
+    np.testing.assert_allclose(out[1], out[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out[2], out[0], rtol=1e-5, atol=1e-5)
+
+    # shared pages survive one slot's release, die with the cache
+    for s in range(3):
+        eng.evict(s)
+    assert eng.pages_in_use == len(pages)       # only the cached pages
+    eng.release_cached_pages(pages)
+    assert eng.pages_in_use == 0
+
+
+# --------------------------------------------------------------------------
+# scheduler-level: cache on == cache off, hit rate > 0, exact mirror
+# --------------------------------------------------------------------------
+def _run_sched(cfg, params, prompts, max_new, cache, n_pages=64,
+               page_size=4, max_seqs=2, max_pages_per_seq=8,
+               prefill_chunk=4):
+    eng = PagedEngine(cfg, params, n_pages=n_pages, page_size=page_size,
+                      max_seqs=max_seqs, max_pages_per_seq=max_pages_per_seq)
+    sched = Scheduler(eng, prefill_chunk=prefill_chunk, prefix_cache=cache)
+    for p in prompts:
+        sched.add_request(p, max_new=max_new)
+    fin = sched.run()
+    return {r.rid: r.out for r in fin}, eng, sched
+
+
+def test_scheduler_cache_on_matches_cache_off(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab, 10).tolist()   # 2.5 pages at ps=4
+    prompts = [system + rng.integers(0, cfg.vocab, 3).tolist()
+               for _ in range(5)]
+    off, eng_off, _ = _run_sched(cfg, params, prompts, 4, None)
+    cache = PrefixCache(page_size=4)
+    on, eng_on, sched = _run_sched(cfg, params, prompts, 4, cache)
+    assert on == off                                   # logits-equivalent
+    assert cache.hit_rate > 0
+    assert sched.stats["prefix_tokens_reused"] > 0
+    assert eng_on.stats["cow_clones"] > 0              # 10 % 4 != 0
+    # host mirror exact; only cache custody differs from the cache-off run
+    assert eng_on.free_pages == sched._free_pages
+    assert eng_on.pages_in_use == cache.n_pages
+    # drain: the full admit -> share -> COW -> release cycle returns all
+    eng_on.release_cached_pages(cache.evict(cache.n_pages))
+    assert eng_on.pages_in_use == 0
+    assert eng_off.pages_in_use == 0
+
+
+def test_partial_match_does_not_block_its_own_eviction(setup):
+    """Admission must not livelock when the pinned COW-source node is
+    itself the one evictable page the budget needs: the partial match is
+    dropped and the page reclaimed (regression for the admission/eviction
+    pin ordering)."""
+    cfg, params = setup
+    # pool of 3 allocatable pages at ps=2, one slot.  Request A caches one
+    # full page; request B only *partially* matches it (1 of 2 tokens) and
+    # needs all 3 pages — admissible only by evicting the matched node.
+    cache = PrefixCache(page_size=2)
+    eng = PagedEngine(cfg, params, n_pages=4, page_size=2, max_seqs=1,
+                      max_pages_per_seq=3)
+    sched = Scheduler(eng, prefill_chunk=4, prefix_cache=cache)
+    sched.add_request([1, 2, 3], max_new=1)
+    sched.add_request([1, 9, 9], max_new=1)      # partial match of [1, 2]
+    finished = sched.run()
+    assert len(finished) == 2 and all(len(r.out) == 1 for r in finished)
+    assert sched.stats["cache_evicted_pages"] >= 1
+    assert eng.free_pages == sched._free_pages
+
+
+def test_cache_eviction_under_memory_pressure(setup):
+    """A pool too small to hold the cache plus new requests evicts cold
+    prefixes (LRU) instead of failing admission or preempting."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    # two distinct 8-token system prompts, requests alternating between
+    # them; pool fits one cached prefix + one running request only
+    sys_a = rng.integers(0, cfg.vocab, 8).tolist()
+    sys_b = rng.integers(0, cfg.vocab, 8).tolist()
+    prompts = [(sys_a if i % 2 == 0 else sys_b)
+               + rng.integers(0, cfg.vocab, 2).tolist() for i in range(4)]
+    off, _, _ = _run_sched(cfg, params, prompts, 3, None, n_pages=10,
+                           page_size=2, max_seqs=1, max_pages_per_seq=8)
+    cache = PrefixCache(page_size=2)
+    on, eng, sched = _run_sched(cfg, params, prompts, 3, cache, n_pages=10,
+                                page_size=2, max_seqs=1, max_pages_per_seq=8)
+    assert on == off
+    assert sched.stats["cache_evicted_pages"] > 0
+    assert eng.free_pages == sched._free_pages
+    eng.release_cached_pages(cache.evict(cache.n_pages))
+    assert eng.pages_in_use == 0
+
+
+# --------------------------------------------------------------------------
+# preemption regression (greedy resume is exact; cache restores the prefix)
+# --------------------------------------------------------------------------
+def test_preemption_resume_is_exact_and_restores_from_cache(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, cfg.vocab, 6).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab, 2).tolist()
+               for _ in range(3)]
+    kw = dict(page_size=2, max_seqs=2, max_pages_per_seq=8, prefill_chunk=4)
+    roomy, _, _ = _run_sched(cfg, params, prompts, 6, None, n_pages=64, **kw)
+
+    # no cache: preempted + resumed greedy outputs must be bit-identical
+    # (the victim's generated tokens ride along in req.out — no re-sampling)
+    tight, _, s1 = _run_sched(cfg, params, prompts, 6, None, n_pages=14, **kw)
+    assert s1.stats["preemptions"] >= 1
+    assert tight == roomy
+
+    # with the cache: same outputs, and the resumed request restores its
+    # fed prefix by mapping pages instead of re-prefilling from token zero
+    cache = PrefixCache(page_size=2)
+    cached, eng, s2 = _run_sched(cfg, params, prompts, 6, cache,
+                                 n_pages=14, **kw)
+    assert s2.stats["preemptions"] >= 1
+    assert cached == roomy
+    assert s2.stats["prefix_tokens_reused"] > 0
+    assert eng.free_pages == s2._free_pages
+    eng.release_cached_pages(cache.evict(cache.n_pages))
+    assert eng.pages_in_use == 0
