@@ -1,22 +1,38 @@
 # CI entry points.  `make test` is the tier-1 verify command (ROADMAP.md);
 # `make bench-serve` exercises the continuous-batching serve engine
 # (decode speedup over the legacy per-sequence path + the shared-prefix
-# cache workload) and writes machine-readable BENCH_serving.json at the
-# repo root so the serving trajectory is tracked PR over PR.
+# cache + swap-pressure workloads) and writes machine-readable
+# BENCH_serving.json at the repo root so the serving trajectory is tracked
+# PR over PR.  `make check-vbi-api` is the VBI API-boundary gate: every KV
+# page lifecycle mutation must flow through core/vbi/blocks.py::VBIAllocator
+# (DESIGN.md §6) — no module outside core/vbi/ may call the raw page ops.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-serve bench-serve-prefix bench serve-demo
+.PHONY: test check-vbi-api bench-serve bench-serve-prefix bench-serve-swap \
+	bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+check-vbi-api:
+	@$(PYTHON) -m pytest -q \
+	    tests/test_vbi_blocks.py::test_raw_page_ops_gated_to_core_vbi \
+	    > /dev/null \
+	    || { $(PYTHON) -m pytest -q \
+	         tests/test_vbi_blocks.py::test_raw_page_ops_gated_to_core_vbi; \
+	         exit 1; }; \
+	echo "check-vbi-api: OK (all page lifecycle goes through VBIAllocator)"
 
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_lm_serving --smoke
 
 bench-serve-prefix:
 	$(PYTHON) -m benchmarks.bench_lm_serving --smoke --workload shared-prefix
+
+bench-serve-swap:
+	$(PYTHON) -m benchmarks.bench_lm_serving --smoke --workload swap-pressure
 
 bench:
 	$(PYTHON) -m benchmarks.run

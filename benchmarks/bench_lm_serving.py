@@ -10,7 +10,10 @@ jitted PagedEngine vs. the legacy per-sequence PagedServer (DESIGN.md §5) —
 the data-centric-vs-processor-centric gap, measurable on CPU — and (5) the
 shared-prefix workload: end-to-end request throughput with the VBI prefix
 cache (serve/prefix_cache.py, DESIGN.md §5.1) on vs. off, plus cache hit
-rate and prefill tokens skipped.  ``--smoke`` writes the machine-readable
+rate and prefill tokens skipped — and (6) the swap-pressure workload:
+request throughput under forced preemption with the VBI host swap tier
+(core/vbi/blocks.py, DESIGN.md §6) vs. discard-and-re-prefill, plus
+swap-in/out counts.  ``--smoke`` writes the machine-readable
 ``BENCH_serving.json`` at the repo root so the serving trajectory is
 tracked PR over PR."""
 from __future__ import annotations
@@ -66,7 +69,7 @@ def bench_serve_engine(decode_steps: int = 24) -> "tuple[list[str], dict]":
     eng = PagedEngine(cfg, params, n_pages=n_pages, page_size=page_size,
                       max_seqs=n_slots, max_pages_per_seq=16)
     for s in slots:
-        eng.admit(s)
+        eng.alloc.alloc(s)
     eng.prefill_chunk(jnp.asarray(prompt),
                       jnp.full((n_slots,), prompt.shape[1], jnp.int32))
     mask = jnp.ones((n_slots,), bool)
@@ -128,15 +131,14 @@ def bench_shared_prefix(n_requests: int = 32, shared_len: int = 256,
     once(None)                                    # compile/warmup
     off_s, off_out, _ = once(None)
     cache = PrefixCache(page_size=page_size)
-    cow0 = eng.stats["cow_clones"]
+    cow0 = eng.alloc.stats["cow_clones"]
     on_s, on_out, sched_on = once(cache)
-    cow_clones = eng.stats["cow_clones"] - cow0
+    cow_clones = eng.alloc.stats["cow_clones"] - cow0
     # drain the cache so the engine is clean for any later user
-    eng.release_cached_pages(cache.evict(cache.n_pages))
+    eng.alloc.release(cache.evict(cache.n_pages))
 
     # the decode loop stays host-transfer-free with shared pages mapped
-    for s in range(2):
-        eng.admit(s)
+    blocks = [eng.alloc.alloc(s) for s in range(2)]
     eng.prefill_chunk(
         jnp.asarray(np.asarray(prompts[0][:page_size], np.int32))[None]
         .repeat(n_slots, 0),
@@ -149,8 +151,8 @@ def bench_shared_prefix(n_requests: int = 32, shared_len: int = 256,
         for _ in range(4):
             out = eng.decode(toks, mask)
         jax.block_until_ready(out)
-    for s in range(2):
-        eng.evict(s)
+    for blk in blocks:
+        eng.alloc.free(blk)
 
     total_tokens = n_requests * (shared_len + unique_len + max_new)
     metrics = {
@@ -174,6 +176,81 @@ def bench_shared_prefix(n_requests: int = 32, shared_len: int = 256,
         f"speedup={metrics['speedup']:.2f}x "
         f"hit_rate={metrics['cache_hit_rate']:.2f} "
         f"skipped={metrics['prefill_tokens_skipped']}tok "
+        f"match={metrics['outputs_match']}")]
+    return lines, metrics
+
+
+def bench_swap_pressure(n_requests: int = 6, prompt_len: int = 64,
+                        max_new: int = 24, n_slots: int = 2
+                        ) -> "tuple[list[str], dict]":
+    """End-to-end request throughput under forced preemption: the pool is
+    sized so concurrently decoding requests oversubscribe it mid-stream.
+    Baseline preemption discards the victim's KV and re-prefills its whole
+    fed span on resume; with the host swap tier (DESIGN.md §6) the victim's
+    pages are copied to host memory and restored with one device scatter —
+    exact logits, ~zero recompute.  Also proves swap-resumed outputs are
+    bit-identical to the discard path (both are greedy-exact)."""
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.scheduler import Scheduler
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    page_size = 8
+    lifetime = prompt_len + max_new                    # 11 pages @ ps=8
+    per_slot = -(-lifetime // page_size) + 1
+    # both slots admit (prompt budget) but cannot both finish: forced
+    # preemption once decode grows past the pool
+    n_pages = 1 + n_slots * (-(-prompt_len // page_size) + 1) + 1
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, prompt_len).tolist()
+               for _ in range(n_requests)]
+
+    def once(swap_pages):
+        eng = PagedEngine(cfg, params, n_pages=n_pages, page_size=page_size,
+                          max_seqs=n_slots, max_pages_per_seq=per_slot,
+                          host_swap_pages=swap_pages)
+        def go():
+            sched = Scheduler(eng, prefill_chunk=page_size)
+            for p in prompts:
+                sched.add_request(p, max_new=max_new)
+            t0 = time.perf_counter()
+            fin = sched.run()
+            dt = time.perf_counter() - t0
+            return dt, {r.rid: r.out for r in fin}, sched
+        go()                                           # compile/warmup
+        pages0 = eng.alloc.stats["swapped_out_pages"]  # exclude warmup swaps
+        dt, out, sched = go()
+        return (dt, out, sched,
+                eng.alloc.stats["swapped_out_pages"] - pages0)
+
+    off_s, off_out, sched_off, _ = once(0)             # discard + re-prefill
+    on_s, on_out, sched_on, swapped_pages = once(per_slot * n_slots)
+    metrics = {
+        "n_requests": n_requests, "prompt_len": prompt_len,
+        "max_new": max_new, "n_pages": n_pages,
+        "req_s_swap_on": n_requests / on_s,
+        "req_s_discard": n_requests / off_s,
+        "speedup": off_s / on_s,
+        "preemptions_swap": sched_on.stats["preemptions"],
+        "preemptions_discard": sched_off.stats["preemptions"],
+        "swap_outs": sched_on.stats["swap_outs"],
+        "swap_ins": sched_on.stats["swap_ins"],
+        "swapped_out_pages": swapped_pages,
+        "prefill_tokens_swap": sched_on.stats["prefill_tokens"],
+        "prefill_tokens_discard": sched_off.stats["prefill_tokens"],
+        "outputs_match": on_out == off_out,
+    }
+    lines = [emit(
+        "lm_serving/swap_pressure_preemption",
+        on_s / n_requests * 1e6,
+        f"swap={metrics['req_s_swap_on']:.2f}req/s "
+        f"discard={metrics['req_s_discard']:.2f}req/s "
+        f"speedup={metrics['speedup']:.2f}x "
+        f"swaps={metrics['swap_outs']}/{metrics['swap_ins']} "
+        f"prefill_toks={metrics['prefill_tokens_swap']}"
+        f"vs{metrics['prefill_tokens_discard']} "
         f"match={metrics['outputs_match']}")]
     return lines, metrics
 
@@ -216,9 +293,11 @@ def run() -> list[str]:
             f"baseline={mb:.4f}s q8={mq:.4f}s ({mb/max(mq,1e-12):.2f}x)"))
     eng_lines, eng_metrics = bench_serve_engine()
     pre_lines, pre_metrics = bench_shared_prefix()
-    lines += eng_lines + pre_lines
+    swp_lines, swp_metrics = bench_swap_pressure()
+    lines += eng_lines + pre_lines + swp_lines
     write_bench_json({"engine_vs_legacy": eng_metrics,
-                      "shared_prefix": pre_metrics})
+                      "shared_prefix": pre_metrics,
+                      "swap_pressure": swp_metrics})
     return lines
 
 
@@ -227,7 +306,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="serving comparisons only (CI fast path)")
     ap.add_argument("--workload", default="all",
-                    choices=("engine", "shared-prefix", "all"),
+                    choices=("engine", "shared-prefix", "swap-pressure",
+                             "all"),
                     help="which serving workload(s) to run under --smoke")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--shared-len", type=int, default=256)
@@ -240,6 +320,9 @@ if __name__ == "__main__":
         if args.workload in ("shared-prefix", "all"):
             _, results["shared_prefix"] = bench_shared_prefix(
                 n_requests=args.requests, shared_len=args.shared_len)
+        if args.workload in ("swap-pressure", "all"):
+            _, results["swap_pressure"] = bench_swap_pressure(
+                n_requests=(6 if args.requests == 32 else args.requests))
         write_bench_json(results)
     else:
         run()

@@ -16,10 +16,13 @@ from .address_space import (SIZE_CLASSES, VBProps, VBInfo, decode_vbi_addr,
 from .cvt import Client, ClientVBTable, CVTCache, PermissionError_, RWX
 from .mtl import MTL, PhysicalMemory
 from .kvcache import PagedKVManager, PagedKVState
+from .blocks import (DEFAULT_BLOCK_PROPS, HostSwapTier, LegacyKVAllocator,
+                     PagePool, VBIAllocator, VirtualBlock)
 
 __all__ = [
     "SIZE_CLASSES", "VBProps", "VBInfo", "encode_vbi_addr", "decode_vbi_addr",
     "make_vbuid", "split_vbuid", "size_class_for", "Client", "ClientVBTable",
     "CVTCache", "RWX", "PermissionError_", "MTL", "PhysicalMemory",
-    "PagedKVManager", "PagedKVState",
+    "PagedKVManager", "PagedKVState", "VBIAllocator", "VirtualBlock",
+    "PagePool", "HostSwapTier", "LegacyKVAllocator", "DEFAULT_BLOCK_PROPS",
 ]

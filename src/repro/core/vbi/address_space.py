@@ -79,6 +79,13 @@ class VBProps(enum.IntFlag):
     HOT = 1 << 8
     COLD = 1 << 9
     KV_CACHE = 1 << 10          # TPU adaptation: serving KV blocks
+    # TPU serve adaptation (core/vbi/blocks.py, DESIGN.md §6): the declared
+    # properties the VBIAllocator turns into placement decisions.
+    PINNED = 1 << 11            # never preempted or swapped
+    EVICTABLE = 1 << 12         # cache-custody pages may be LRU-dropped
+    SWAPPABLE = 1 << 13         # preemption may demote to the host tier
+    SHARED_RO = 1 << 14         # maps pages it does not own, read-only
+    COW = 1 << 15               # holds a copy-on-write clone
 
 
 @dataclasses.dataclass

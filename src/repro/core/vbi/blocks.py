@@ -1,0 +1,409 @@
+"""The VBI memory API for serving — one allocator, property-driven placement.
+
+The thesis' VBI chapter argues memory management should be a *single
+interface that understands and exploits data properties*, not scattered,
+property-blind bookkeeping.  Before this module, the serve stack had regrown
+exactly the pre-VBI shape: ``Scheduler``, ``PrefixCache`` and ``PagedEngine``
+each manipulated page lifecycle directly, and invariants like refcount
+conservation were enforced by convention in three places.
+
+:class:`VBIAllocator` is now the ONLY door to KV page lifecycle (enforced by
+``make check-vbi-api``).  Each request's KV is a :class:`VirtualBlock` with
+declared properties (:class:`~repro.core.vbi.address_space.VBProps`) that
+drive placement:
+
+  * ``SHARED_RO`` / ``COW`` — the block maps prefix-cache pages read-only /
+    holds a copy-on-write clone (``map_shared`` / ``cow_break``);
+  * ``PINNED`` — never chosen as a preemption victim, never swapped;
+  * ``EVICTABLE`` — pages whose custody moved to the prefix cache may be
+    LRU-dropped under pressure;
+  * ``SWAPPABLE`` — under memory pressure the block's device pages are
+    copied to the host tier (:class:`HostSwapTier`) and freed; on resume
+    they are restored with ONE device scatter
+    (``kvcache.py::restore_block``) — exact logits, no re-prefill.  This is
+    the serve-path form of the paper's ``MTL.swap_out`` capacity system
+    call (Sec. 3.2.4).
+
+The allocator owns the host page mirror (``free_pages``), the custody
+ledger between slots and the prefix cache, and the MTL VB lifecycle; the
+device owns translation and refcounts (``PagedServeState``).  Policy (which
+slot, which victim, when) stays in ``serve/scheduler.py``; mechanism is
+here and in ``kvcache.py``.  See DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .address_space import VBProps
+from .kvcache import (PagedKVManager, admit_slot, clone_page_cow,
+                      init_serve_state, map_prefix, release_pages,
+                      release_slot, restore_block, retain_pages,
+                      snapshot_block)
+from .mtl import MTL, PhysicalMemory
+
+DEFAULT_BLOCK_PROPS = (VBProps.KV_CACHE | VBProps.EVICTABLE
+                       | VBProps.SWAPPABLE)
+
+
+@dataclasses.dataclass
+class VirtualBlock:
+    """One request's KV stream: a slot-resident (or host-swapped) VB.
+
+    ``reserved_pages`` is the block's charge against the allocator's host
+    page mirror (budgeted ahead of device pops — the paper's early
+    reservation); ``shared_pages`` counts pages in the block's span that the
+    block does NOT own (mapped read-only from the prefix cache, or whose
+    custody moved to it).  ``n_tokens`` mirrors the device ``seq_lens``
+    entry — what a swap image must cover."""
+    bid: int
+    slot: int
+    props: VBProps
+    n_tokens: int = 0
+    reserved_pages: int = 0
+    shared_pages: int = 0
+    status: str = "resident"            # resident | swapped | freed
+    vbid: int = -1                      # MTL VB id while resident
+
+    @property
+    def pinned(self) -> bool:
+        return bool(self.props & VBProps.PINNED)
+
+    @property
+    def swappable(self) -> bool:
+        return bool(self.props & VBProps.SWAPPABLE)
+
+    @property
+    def evictable(self) -> bool:
+        return bool(self.props & VBProps.EVICTABLE)
+
+
+class PagePool:
+    """Minimal device page-pool holder: the state + geometry an allocator
+    needs.  :class:`~repro.serve.engine.PagedEngine` satisfies the same
+    protocol (``state``, ``n_pages``, ``page_size``, ``max_seqs``,
+    ``max_pages``); this class exists so the allocator can be used — and
+    tested — without a model."""
+
+    def __init__(self, n_layers: int, n_pages: int, page_size: int,
+                 n_kv: int, head_dim: int, max_seqs: int,
+                 max_pages_per_seq: int, dtype=jnp.float32):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_seqs = max_seqs
+        self.max_pages = max_pages_per_seq
+        self.state = init_serve_state(
+            n_layers=n_layers, n_pages=n_pages, page_size=page_size,
+            n_kv=n_kv, head_dim=head_dim, max_seqs=max_seqs,
+            max_pages_per_seq=max_pages_per_seq, dtype=dtype)
+
+
+@dataclasses.dataclass
+class _SwapImage:
+    k: np.ndarray                       # [n_layers, n_pages, ps, n_kv, hd]
+    v: np.ndarray
+    n_pages: int
+    n_tokens: int
+
+
+class HostSwapTier:
+    """Host backing store for swapped-out blocks, capacity-bounded in
+    pages.  Holds exact K/V bytes; the device holds nothing for a swapped
+    block, so its pages are free for other requests."""
+
+    def __init__(self, capacity_pages: int):
+        assert capacity_pages > 0
+        self.capacity_pages = capacity_pages
+        self.used_pages = 0
+        self.images: Dict[int, _SwapImage] = {}
+
+    def can_hold(self, n_pages: int) -> bool:
+        return self.used_pages + n_pages <= self.capacity_pages
+
+    def put(self, bid: int, img: _SwapImage) -> None:
+        assert bid not in self.images and self.can_hold(img.n_pages)
+        self.images[bid] = img
+        self.used_pages += img.n_pages
+
+    def pop(self, bid: int) -> _SwapImage:
+        img = self.images.pop(bid)
+        self.used_pages -= img.n_pages
+        return img
+
+
+class VBIAllocator:
+    """The single interface through which KV memory is allocated, shared,
+    cloned, pinned, swapped, and released.
+
+    Mechanism split: this class owns host-side accounting (page mirror,
+    reservations, custody, swap tier, MTL VB lifecycle) and issues the
+    jitted device ops from ``kvcache.py``; it never reads device state on
+    the token path (``free_pages`` is mirrored arithmetically — the only
+    syncs are ``page_row`` and ``swap_out``, both control-path)."""
+
+    def __init__(self, pool, host_swap_pages: int = 0,
+                 mtl: Optional[MTL] = None):
+        self.pool = pool
+        self.mtl = mtl or MTL(PhysicalMemory(1 << 12))
+        self.free_pages = pool.n_pages - 1          # host mirror (page 0 null)
+        self.blocks: Dict[int, VirtualBlock] = {}   # resident, by slot
+        self.swap = (HostSwapTier(host_swap_pages) if host_swap_pages > 0
+                     else None)
+        self._next_bid = 0
+        self.stats = {"allocs": 0, "frees": 0, "prefix_maps": 0,
+                      "prefix_pages_mapped": 0, "cow_clones": 0,
+                      "cached_page_retains": 0, "cached_page_releases": 0,
+                      "swap_outs": 0, "swap_ins": 0, "swapped_out_pages": 0,
+                      "swapped_in_pages": 0, "swap_rejects": 0}
+
+    # -- geometry / budget ---------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.pool.page_size)
+
+    @property
+    def device_free_pages(self) -> int:
+        """Device free-stack depth.  Syncs; never call on the token path."""
+        return int(self.pool.state.free_top)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Device pages currently mapped by anyone.  Syncs."""
+        return self.pool.n_pages - 1 - self.device_free_pages
+
+    def _padded_ids(self, pages: Sequence[int]) -> jax.Array:
+        assert len(pages) <= self.pool.max_pages
+        ids = np.zeros((self.pool.max_pages,), np.int32)
+        ids[:len(pages)] = pages
+        return jnp.asarray(ids)
+
+    # -- lifecycle -----------------------------------------------------------
+    def alloc(self, slot: int,
+              props: VBProps = DEFAULT_BLOCK_PROPS) -> VirtualBlock:
+        """Enable a VB on ``slot``.  Allocates NOTHING — backing pages
+        arrive on first dirty writeback (device ``reserve_positions``) or
+        via ``map_shared``/``swap_in``."""
+        assert slot not in self.blocks, "slot busy"
+        blk = VirtualBlock(self._next_bid, slot, props)
+        self._next_bid += 1
+        blk.vbid = self.mtl.enable_vb(0, props)
+        self.pool.state = admit_slot(self.pool.state, jnp.int32(slot))
+        self.blocks[slot] = blk
+        self.stats["allocs"] += 1
+        return blk
+
+    def free(self, block: VirtualBlock) -> None:
+        """Release the block: device pages it owns return to the free stack
+        (shared/cache-custody pages survive via refcounts), its reservation
+        returns to the mirror.  Double-free is a no-op."""
+        if block.status == "freed":
+            return
+        if block.status == "swapped":           # drop the host image
+            self.swap.pop(block.bid)
+            block.status = "freed"
+            self.stats["frees"] += 1
+            return
+        self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
+        self.mtl.disable_vb(0, block.vbid)
+        self.free_pages += block.reserved_pages
+        block.reserved_pages = 0
+        block.shared_pages = 0
+        block.vbid = -1
+        block.status = "freed"
+        del self.blocks[block.slot]
+        self.stats["frees"] += 1
+
+    # -- reservation (host mirror of the device free stack; zero syncs) ------
+    def reserve_pages(self, block: VirtualBlock, n_pages: int) -> None:
+        """Grow the block's reservation to at least ``n_pages`` — the
+        paper's early reservation: budget charged before any device pop so
+        concurrent prefills can never oversubscribe the free stack."""
+        if n_pages > block.reserved_pages:
+            grow = n_pages - block.reserved_pages
+            assert grow <= self.free_pages, "KV pool oversubscribed"
+            self.free_pages -= grow
+            block.reserved_pages = n_pages
+
+    def reserve(self, block: VirtualBlock, n_tokens: int) -> None:
+        """Token-level reservation: cover ``n_tokens`` minus pages in the
+        span the block does not own."""
+        self.reserve_pages(
+            block, self.pages_for(n_tokens) - block.shared_pages)
+
+    def commit(self, block: VirtualBlock, n_tokens: int) -> None:
+        """Record that ``n_tokens`` are now written on device (mirror of
+        ``seq_lens`` — what a swap image must cover)."""
+        block.n_tokens = n_tokens
+
+    # -- sharing / COW (the prefix-cache face of the API) ---------------------
+    def map_shared(self, block: VirtualBlock, page_ids: Sequence[int],
+                   n_tokens: int) -> None:
+        """Map already-filled cached pages read-only into the block (one
+        device scatter, zero prefill FLOPs); each page gains a reference."""
+        assert block.status == "resident"
+        self.pool.state = map_prefix(
+            self.pool.state, jnp.int32(block.slot), self._padded_ids(page_ids),
+            jnp.int32(len(page_ids)), jnp.int32(n_tokens))
+        block.shared_pages = len(page_ids)
+        block.n_tokens = n_tokens
+        block.props |= VBProps.SHARED_RO
+        self.stats["prefix_maps"] += 1
+        self.stats["prefix_pages_mapped"] += len(page_ids)
+
+    def cow_break(self, block: VirtualBlock, page_idx: int, src_page: int,
+                  new_len: int) -> None:
+        """Copy-on-write break of a partially shared page into the block
+        (pops one device page — the block's reservation must cover it)."""
+        assert block.status == "resident"
+        self.pool.state = clone_page_cow(
+            self.pool.state, jnp.int32(block.slot), jnp.int32(page_idx),
+            jnp.int32(src_page), jnp.int32(new_len))
+        block.n_tokens = new_len
+        block.props |= VBProps.COW
+        self.stats["cow_clones"] += 1
+
+    def page_row(self, block: VirtualBlock, n_pages: int) -> List[int]:
+        """Device→host read of the block's first ``n_pages`` page ids (for
+        prefix-cache insertion).  Control path only: this syncs."""
+        row = np.asarray(jax.device_get(
+            self.pool.state.page_table[block.slot]))
+        return [int(p) for p in row[:n_pages]]
+
+    def retain(self, page_ids: Sequence[int],
+               from_block: Optional[VirtualBlock] = None) -> None:
+        """The prefix cache takes custody: +1 device reference per page so
+        they outlive their slot.  With ``from_block``, the pages move out
+        of that block's reservation (the mirror stays exact: the pages are
+        still in use, now on the cache's ledger)."""
+        for i in range(0, len(page_ids), self.pool.max_pages):
+            chunk = page_ids[i:i + self.pool.max_pages]
+            self.pool.state = retain_pages(
+                self.pool.state, self._padded_ids(chunk), jnp.int32(len(chunk)))
+        if from_block is not None:
+            assert from_block.reserved_pages >= len(page_ids)
+            from_block.reserved_pages -= len(page_ids)
+            from_block.shared_pages += len(page_ids)
+        self.stats["cached_page_retains"] += len(page_ids)
+
+    def release(self, page_ids: Sequence[int]) -> None:
+        """Prefix-cache eviction: drop the cache's reference; refcount-zero
+        pages return to the free stack and to the host mirror."""
+        for i in range(0, len(page_ids), self.pool.max_pages):
+            chunk = page_ids[i:i + self.pool.max_pages]
+            self.pool.state = release_pages(
+                self.pool.state, self._padded_ids(chunk), jnp.int32(len(chunk)))
+        self.free_pages += len(page_ids)
+        self.stats["cached_page_releases"] += len(page_ids)
+
+    # -- the host swap tier (property-driven placement) ------------------------
+    def swap_out(self, block: VirtualBlock) -> bool:
+        """Demote the block to the host tier: copy its device pages out,
+        free them, return its reservation to the mirror.  Returns False —
+        caller falls back to discard — when the block's declared properties
+        forbid it (not SWAPPABLE, or PINNED), no tier is configured, there
+        is nothing to save, or the tier is full."""
+        if (self.swap is None or not block.swappable or block.pinned
+                or block.status != "resident" or block.n_tokens == 0):
+            return False
+        n_pages = self.pages_for(block.n_tokens)
+        if not self.swap.can_hold(n_pages):
+            self.stats["swap_rejects"] += 1
+            return False
+        k, v = snapshot_block(self.pool.state, jnp.int32(block.slot))
+        img = _SwapImage(np.asarray(jax.device_get(k))[:, :n_pages],
+                         np.asarray(jax.device_get(v))[:, :n_pages],
+                         n_pages, block.n_tokens)
+        self.swap.put(block.bid, img)
+        self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
+        self.mtl.disable_vb(0, block.vbid)
+        self.free_pages += block.reserved_pages
+        block.reserved_pages = 0
+        block.shared_pages = 0
+        block.vbid = -1
+        del self.blocks[block.slot]
+        block.slot = -1
+        block.status = "swapped"
+        self.stats["swap_outs"] += 1
+        self.stats["swapped_out_pages"] += n_pages
+        return True
+
+    def swap_in(self, block: VirtualBlock, slot: int,
+                reserve_pages: Optional[int] = None) -> VirtualBlock:
+        """Promote a swapped block back onto ``slot``: pop fresh pages and
+        restore the host image with ONE device scatter — exact KV, no
+        re-prefill.  ``reserve_pages`` (≥ the image size) is charged to the
+        mirror up front, like any admission budget."""
+        assert block.status == "swapped", "block is not swapped out"
+        assert slot not in self.blocks, "slot busy"
+        img = self.swap.pop(block.bid)
+        need = reserve_pages if reserve_pages is not None else img.n_pages
+        assert need >= img.n_pages
+        assert need <= self.free_pages, "KV pool oversubscribed"
+        self.free_pages -= need
+        P = self.pool.max_pages
+        k = np.zeros((img.k.shape[0], P) + img.k.shape[2:], img.k.dtype)
+        v = np.zeros_like(k)
+        k[:, :img.n_pages] = img.k
+        v[:, :img.n_pages] = img.v
+        self.pool.state = restore_block(
+            self.pool.state, jnp.int32(slot), jnp.asarray(k), jnp.asarray(v),
+            jnp.int32(img.n_pages), jnp.int32(img.n_tokens))
+        block.slot = slot
+        block.status = "resident"
+        block.n_tokens = img.n_tokens
+        block.reserved_pages = need
+        block.shared_pages = 0
+        # restored pages are private copies: the sharing annotations die
+        block.props &= ~(VBProps.SHARED_RO | VBProps.COW)
+        block.vbid = self.mtl.enable_vb(0, block.props)
+        self.blocks[slot] = block
+        self.stats["swap_ins"] += 1
+        self.stats["swapped_in_pages"] += img.n_pages
+        return block
+
+
+class LegacyKVAllocator:
+    """The legacy, property-blind :class:`PagedKVManager` wrapped behind the
+    VirtualBlock lifecycle subset — the equivalence oracle for the
+    allocator's reservation arithmetic (``tests/test_vbi_blocks.py``).
+    Sharing, COW and swap do not exist pre-VBI and raise."""
+
+    def __init__(self, mgr: PagedKVManager):
+        self.mgr = mgr
+        self._next_bid = 0
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.mgr.page_size)
+
+    def alloc(self, slot: int,
+              props: VBProps = DEFAULT_BLOCK_PROPS) -> VirtualBlock:
+        self.mgr.new_seq(slot)
+        blk = VirtualBlock(self._next_bid, slot, props)
+        self._next_bid += 1
+        return blk
+
+    def reserve(self, block: VirtualBlock, n_tokens: int) -> None:
+        # the legacy manager has no early reservation: it allocates
+        # physically, immediately (the property-blind behaviour)
+        self.mgr.ensure_capacity(block.slot, n_tokens)
+        block.reserved_pages = len(self.mgr.seq_pages[block.slot])
+        block.n_tokens = max(block.n_tokens, n_tokens)
+
+    def free(self, block: VirtualBlock) -> None:
+        if block.status == "freed":
+            return
+        self.mgr.release_seq(block.slot)
+        block.reserved_pages = 0
+        block.status = "freed"
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.mgr.pages_in_use
+
+    def map_shared(self, *a, **k):
+        raise NotImplementedError("legacy manager is property-blind")
+
+    cow_break = swap_out = swap_in = map_shared

@@ -293,6 +293,50 @@ def release_pages(state: PagedServeState, page_ids: jax.Array,
         page_refcounts=jnp.maximum(refc, 0))
 
 
+# --------------------------------------------------------------------------
+# host swap tier: demote a block's device pages to host memory and restore
+# them with one scatter (the serve-path form of MTL.swap_out/swap_in,
+# Sec. 3.2.4 — see core/vbi/blocks.py::VBIAllocator, DESIGN.md §6)
+# --------------------------------------------------------------------------
+@jax.jit
+def snapshot_block(state: PagedServeState, slot: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Gather one slot's mapped pages' K/V — shape
+    [n_layers, max_pages_per_seq, page_size, n_kv, head_dim] — so the host
+    swap tier can copy them out.  Control path only: the caller
+    ``device_get``s the result before releasing the slot."""
+    pages = state.page_table[slot]                          # [P]
+    return state.k_pages[:, pages], state.v_pages[:, pages]
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def restore_block(state: PagedServeState, slot: jax.Array, k_blk: jax.Array,
+                  v_blk: jax.Array, n_pages: jax.Array, n_tokens: jax.Array
+                  ) -> PagedServeState:
+    """Swap-in: pop ``n_pages`` pages off the free stack, install them as
+    ``slot``'s page-table row, and scatter the host-tier K/V image
+    (``k_blk``/``v_blk``, padded to the static row width) into them — one
+    jitted dispatch, exact KV, zero recompute.  Restored pages are private:
+    refcount 1, owned by the slot."""
+    P = state.max_pages_per_seq
+    idx = jnp.arange(P)
+    held = idx < n_pages
+    src = jnp.clip(state.free_top - 1 - idx, 0)
+    pages = jnp.where(held, state.free_stack[src], 0)
+    dst = jnp.where(held, pages, state.n_pages)             # drop masked lanes
+    return dataclasses.replace(
+        state,
+        k_pages=state.k_pages.at[:, dst].set(k_blk.astype(state.k_pages.dtype),
+                                             mode="drop"),
+        v_pages=state.v_pages.at[:, dst].set(v_blk.astype(state.v_pages.dtype),
+                                             mode="drop"),
+        page_table=state.page_table.at[slot].set(jnp.where(held, pages, 0)),
+        seq_lens=state.seq_lens.at[slot].set(n_tokens),
+        slot_active=state.slot_active.at[slot].set(True),
+        free_top=state.free_top - n_pages,
+        page_refcounts=state.page_refcounts.at[dst].set(1, mode="drop"))
+
+
 def reserve_positions(state: PagedServeState, slot_mask: jax.Array
                       ) -> Tuple[PagedServeState, jax.Array]:
     """Reserve the next token position for every masked slot — the paper's

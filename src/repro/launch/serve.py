@@ -5,12 +5,15 @@
 
 Default path: serve/engine.py (single jitted decode dispatch, device-side
 delayed page allocation) driven by serve/scheduler.py (admission, chunked
-prefill, eviction, preemption) with the VBI prefix cache enabled
-(serve/prefix_cache.py — cross-request KV page sharing, DESIGN.md §5.1;
-disable with ``--no-prefix-cache``).  ``--shared-prefix N`` prepends an
-N-token system prompt to every request so the sharing is visible in the
-stats.  ``--legacy`` runs the per-sequence reference path (serve/paged.py)
-for comparison.
+prefill, eviction, preemption), with all KV page lifecycle flowing through
+the VBI memory API (core/vbi/blocks.py::VBIAllocator, DESIGN.md §6) and
+the VBI prefix cache enabled (serve/prefix_cache.py — cross-request KV
+page sharing, DESIGN.md §5.1; disable with ``--no-prefix-cache``).
+``--shared-prefix N`` prepends an N-token system prompt to every request
+so the sharing is visible in the stats.  ``--host-swap-pages N`` enables
+the host swap tier: preemption victims are demoted to host memory and
+resume with one device scatter instead of re-prefilling.  ``--legacy``
+runs the per-sequence reference path (serve/paged.py) for comparison.
 """
 from __future__ import annotations
 
@@ -54,6 +57,10 @@ def main(argv=None) -> None:
                          "request (exercises the prefix cache)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable cross-request KV page sharing")
+    ap.add_argument("--host-swap-pages", type=int, default=0,
+                    help="host swap tier capacity in pages (0 = off); "
+                         "SWAPPABLE preemption victims demote to host "
+                         "memory and resume without re-prefilling")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="per-sequence reference path (serve/paged.py)")
@@ -74,7 +81,8 @@ def main(argv=None) -> None:
         engine = PagedEngine(
             cfg, params, page_size=page_size, max_seqs=args.batch_slots,
             n_pages=1 + args.batch_slots * (32 + args.shared_prefix
-                                            // page_size))
+                                            // page_size),
+            host_swap_pages=args.host_swap_pages)
         cache = (None if args.no_prefix_cache
                  else PrefixCache(page_size=page_size))
         sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
@@ -86,6 +94,7 @@ def main(argv=None) -> None:
                   f"{req.prompt[-4:]} -> {req.out[:8]}...")
         decoded = args.requests * (len(prompts[0]) + args.max_new)
         print(f"[serve] engine stats {engine.stats} "
+              f"allocator stats {engine.alloc.stats} "
               f"sched stats {sched.stats}")
         if cache is not None:
             print(f"[serve] prefix cache: hit_rate={cache.hit_rate:.2f} "

@@ -23,19 +23,16 @@ gather path (XLA, default on CPU) or the Pallas paged-attention kernel
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
-from ..core.vbi.address_space import VBProps
-from ..core.vbi.kvcache import (PagedServeState, admit_slot, clone_page_cow,
-                                init_serve_state, map_prefix, release_pages,
-                                release_slot, reserve_positions, retain_pages,
-                                write_token_kv)
-from ..core.vbi.mtl import MTL, PhysicalMemory
+from ..core.vbi.blocks import VBIAllocator
+from ..core.vbi.kvcache import (PagedServeState, init_serve_state,
+                                reserve_positions, write_token_kv)
+from ..core.vbi.mtl import MTL
 from ..kernels.paged_attention.kernel import paged_attn_one_seq
 from ..models.config import ModelConfig
 from ..models.layers import mlp, rms_norm
@@ -129,15 +126,18 @@ def _token_step(cfg: ModelConfig, max_pages: int, attn_impl: str, params,
 class PagedEngine:
     """Continuous-batching serve engine for uniform dense GQA stacks.
 
-    Host side owns only *policy* (which slot, which request — see
-    serve/scheduler.py) plus the paper's MTL VB lifecycle bookkeeping;
-    the per-token fast path is a single donated jit dispatch.
+    The engine is now *compute only*: the per-token fast path is a single
+    donated jit dispatch over the device page pool.  ALL page lifecycle —
+    allocation, sharing, COW, pinning, swap, release — goes through
+    ``self.alloc`` (:class:`~repro.core.vbi.blocks.VBIAllocator`, the VBI
+    memory API, DESIGN.md §6); policy lives in serve/scheduler.py.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_pages: int = 256,
                  page_size: int = 16, max_seqs: int = 8,
                  max_pages_per_seq: Optional[int] = None,
-                 attn_impl: str = "gather", mtl: Optional[MTL] = None):
+                 attn_impl: str = "gather", mtl: Optional[MTL] = None,
+                 host_swap_pages: int = 0):
         assert not cfg.local_global_period and not cfg.rglru_period \
             and cfg.family in ("dense", "vlm"), \
             "paged engine supports uniform GQA stacks"
@@ -148,16 +148,14 @@ class PagedEngine:
         self.n_pages = n_pages
         self.max_seqs = max_seqs
         self.max_pages = max_pages_per_seq or -(-(n_pages - 1) // max_seqs)
-        self.mtl = mtl or MTL(PhysicalMemory(1 << 12))
-        self._vbid = [-1] * max_seqs
-        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
-                      "admits": 0, "releases": 0, "prefix_maps": 0,
-                      "prefix_pages_mapped": 0, "cow_clones": 0,
-                      "cached_page_retains": 0, "cached_page_releases": 0}
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0}
         self.state = init_serve_state(
             n_layers=cfg.n_layers, n_pages=n_pages, page_size=page_size,
             n_kv=cfg.n_kv, head_dim=cfg.head_dim, max_seqs=max_seqs,
             max_pages_per_seq=self.max_pages, dtype=jnp.float32)
+        # the engine satisfies the allocator's pool protocol (.state + geom)
+        self.alloc = VBIAllocator(self, host_swap_pages=host_swap_pages,
+                                  mtl=mtl)
 
         def _decode(params, state, tokens, slot_mask):
             return _token_step(cfg, self.max_pages, attn_impl, params,
@@ -181,69 +179,6 @@ class PagedEngine:
         # KV state donated so the pool is updated in place.
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
-
-    # -- slot lifecycle (control path; device ops, host keeps no KV state) --
-    def admit(self, slot: int) -> None:
-        assert self._vbid[slot] == -1, "slot busy"
-        self._vbid[slot] = self.mtl.enable_vb(0, VBProps.KV_CACHE)
-        self.state = admit_slot(self.state, jnp.int32(slot))
-        self.stats["admits"] += 1
-
-    def evict(self, slot: int) -> None:
-        self.mtl.disable_vb(0, int(self._vbid[slot]))
-        self._vbid[slot] = -1
-        self.state = release_slot(self.state, jnp.int32(slot))
-        self.stats["releases"] += 1
-
-    # -- prefix sharing (control path: admission / cache custody; the
-    # decode fast path below is untouched and stays host-transfer-free) ----
-    def _padded_ids(self, pages: Sequence[int]) -> jax.Array:
-        assert len(pages) <= self.max_pages
-        ids = np.zeros((self.max_pages,), np.int32)
-        ids[:len(pages)] = pages
-        return jnp.asarray(ids)
-
-    def map_prefix(self, slot: int, pages: Sequence[int],
-                   n_tokens: int) -> None:
-        """Map already-filled cached pages read-only into ``slot`` (one
-        device scatter into page_table/seq_lens; zero prefill FLOPs)."""
-        self.state = map_prefix(self.state, jnp.int32(slot),
-                                self._padded_ids(pages),
-                                jnp.int32(len(pages)), jnp.int32(n_tokens))
-        self.stats["prefix_maps"] += 1
-        self.stats["prefix_pages_mapped"] += len(pages)
-
-    def clone_cow(self, slot: int, page_idx: int, src_page: int,
-                  new_len: int) -> None:
-        """COW-break a partially shared page into ``slot`` (pops one page
-        off the device free stack — the caller's budget must cover it)."""
-        self.state = clone_page_cow(self.state, jnp.int32(slot),
-                                    jnp.int32(page_idx), jnp.int32(src_page),
-                                    jnp.int32(new_len))
-        self.stats["cow_clones"] += 1
-
-    def retain_pages(self, pages: Sequence[int]) -> None:
-        """Prefix cache takes custody: +1 device reference per page."""
-        for i in range(0, len(pages), self.max_pages):
-            chunk = pages[i:i + self.max_pages]
-            self.state = retain_pages(self.state, self._padded_ids(chunk),
-                                      jnp.int32(len(chunk)))
-            self.stats["cached_page_retains"] += len(chunk)
-
-    def release_cached_pages(self, pages: Sequence[int]) -> None:
-        """Prefix-cache eviction: -1 reference; refcount-zero pages return
-        to the device free stack."""
-        for i in range(0, len(pages), self.max_pages):
-            chunk = pages[i:i + self.max_pages]
-            self.state = release_pages(self.state, self._padded_ids(chunk),
-                                       jnp.int32(len(chunk)))
-            self.stats["cached_page_releases"] += len(chunk)
-
-    def read_page_row(self, slot: int, n_pages: int) -> List[int]:
-        """Device→host read of ``slot``'s first ``n_pages`` page ids, for
-        prefix-cache insertion.  Control path only: this syncs."""
-        row = np.asarray(jax.device_get(self.state.page_table[slot]))
-        return [int(p) for p in row[:n_pages]]
 
     # -- the fast paths ------------------------------------------------------
     def decode(self, tokens: jax.Array, slot_mask: jax.Array) -> jax.Array:

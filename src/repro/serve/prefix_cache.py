@@ -11,15 +11,19 @@ maps the longest cached prefix read-only into the new slot's page table (one
 device scatter — no recompute, no data movement), COW-clones the last
 partially-matching page, and prefills only the uncached suffix.
 
-Custody protocol (keeps the scheduler's host page-accounting mirror exact,
-DESIGN.md §5.1):
+Custody protocol (keeps the VBIAllocator's host page mirror exact,
+DESIGN.md §5.1/§6).  This module is a pure host-side index: it never
+touches device pages itself — every custody change goes through the one
+memory API (``core/vbi/blocks.py::VBIAllocator``):
 
 * every cached node holds exactly one device reference on its page
-  (``retain_pages``), taken when a slot's freshly prefilled prompt pages are
+  (``VBIAllocator.retain``, custody moved out of the inserting block's
+  reservation), taken when a slot's freshly prefilled prompt pages are
   inserted; the page then outlives the slot;
-* every slot that maps a cached page pins the node (``pin``) for its
-  lifetime, so eviction only ever touches pages whose device refcount is
-  exactly 1 — freeing them is unconditional and the host mirror stays
+* every slot that maps a cached page (``VBIAllocator.map_shared``) pins the
+  node (``pin``) for its lifetime, so eviction only ever touches pages
+  whose device refcount is exactly 1 — freeing them
+  (``VBIAllocator.release``) is unconditional and the mirror stays
   arithmetic, never synced;
 * eviction is LRU over unpinned leaves (children evict before parents, so
   the trie always remains a valid prefix index).
@@ -187,8 +191,8 @@ class PrefixCache:
         """Register fully-written prompt pages: ``page_ids[i]`` holds the KV
         of ``tokens[i*ps:(i+1)*ps]``.  Blocks already cached are skipped
         (first writer wins; the duplicate page stays with its slot).
-        Returns the newly created nodes — their pages change custody to the
-        cache and the caller must ``retain_pages`` them on device."""
+        Returns the newly created nodes — the caller must move their pages
+        to cache custody via ``VBIAllocator.retain(pages, from_block=…)``."""
         ps = self.page_size
         assert len(tokens) >= len(page_ids) * ps
         self._clock += 1

@@ -1,36 +1,40 @@
 """Continuous-batching scheduler over the jitted PagedEngine (host policy).
 
-The division of labour follows the VBI design: the device owns translation
-and allocation mechanics (page pool, free stack — see core/vbi/kvcache.py),
-the host owns *policy* only.  Crucially the host never reads device state on
-the token path — it mirrors page accounting arithmetically (a slot consumes
-a page exactly when its length crosses a page boundary), so admission,
-eviction and preemption decisions need zero syncs.
+The division of labour follows the VBI design (DESIGN.md §6): the device
+owns translation and allocation mechanics (page pool, free stack —
+core/vbi/kvcache.py), the VBIAllocator (core/vbi/blocks.py) owns the memory
+*interface* — every page-lifecycle mutation (reserve, share, COW, custody,
+swap, release) flows through it against each request's VirtualBlock and its
+declared properties — and this module owns *policy* only: which request,
+which slot, which victim, when.  The host never reads device state on the
+token path; the allocator mirrors page accounting arithmetically, so
+admission, eviction and preemption decisions need zero syncs.
 
 Policies implemented:
 
   * **admission** — a queued request is admitted when a slot is free and
-    the mirrored page budget covers its prompt plus one decode page; the
-    budget is *reserved* at admission so concurrent prefills can never
-    oversubscribe the device free stack.  With a :class:`PrefixCache`
-    attached, admission first looks up the longest cached prefix, maps
-    those pages read-only into the slot (no recompute) and budgets only
-    the uncached suffix — shared pages are the cache's to free, never the
-    slot's;
+    the allocator's mirrored budget covers its prompt plus one decode page;
+    the budget is *reserved* at admission (the paper's early reservation)
+    so concurrent prefills can never oversubscribe the device free stack.
+    With a :class:`PrefixCache` attached, admission first maps the longest
+    cached prefix read-only (no recompute) and budgets only the uncached
+    suffix.  A request preempted to the host swap tier re-admits by
+    ``swap_in`` — one device scatter restores its exact KV;
   * **chunked prefill** — admitted prompts are fed ``prefill_chunk`` tokens
-    per engine dispatch (one jit call per chunk, not per token), ragged
-    across slots; when a prompt finishes prefilling, its full pages are
-    inserted into the prefix cache (custody moves from the slot's
-    reservation to the cache ledger — the mirror stays exact);
-  * **eviction** — finished requests release their slot; the device frees
-    only pages whose refcount reaches zero, so cached prompt pages
-    survive for the next request.  Cold cached prefixes are evicted LRU
-    when admission or decode needs pages (before any preemption);
+    per engine dispatch, ragged across slots; finished prompts hand their
+    full pages to the prefix cache (custody moves through the allocator —
+    the mirror stays exact);
+  * **eviction** — finished requests free their block; the device frees
+    only refcount-zero pages, so cached prompt pages survive.  Cold cached
+    prefixes are evicted LRU when admission or decode needs pages (before
+    any preemption);
   * **preemption** — if a decode step would exhaust the pool, the youngest
-    running request is preempted: its generated tokens stay on the request
-    (greedy resume is bit-identical — see the regression test), its fed
-    prefix is saved into the prefix cache, and on re-admission it restores
-    from the cache instead of re-prefilling from token zero.
+    running non-PINNED request is preempted.  Placement is decided by the
+    victim's declared block properties: a SWAPPABLE block is demoted to the
+    host tier (device pages copied out and freed; resume restores them with
+    one scatter — exact logits, no recompute); otherwise its fed prefix is
+    saved into the prefix cache and its pages discarded, and re-admission
+    restores from the cache (or re-prefills) instead.
 """
 from __future__ import annotations
 
@@ -41,6 +45,8 @@ from typing import Deque, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.vbi.address_space import VBProps
+from ..core.vbi.blocks import DEFAULT_BLOCK_PROPS, VirtualBlock
 from .engine import PagedEngine
 from .prefix_cache import PrefixCache, PrefixMatch, _Node
 
@@ -52,6 +58,9 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+    # KV demoted to the host swap tier at preemption rides along here and
+    # is restored (swap_in) at re-admission
+    block: Optional[VirtualBlock] = None
 
     @property
     def tokens(self) -> List[int]:
@@ -61,6 +70,7 @@ class Request:
 @dataclasses.dataclass
 class _SlotState:
     req: Request
+    block: VirtualBlock
     prefill_len: int        # tokens to prefill (snapshot at admission)
     fed: int = 0            # tokens written/mapped into the KV so far
     admit_seq: int = 0      # admission order (preemption picks the youngest)
@@ -74,25 +84,23 @@ class _SlotState:
 
 class Scheduler:
     def __init__(self, engine: PagedEngine, prefill_chunk: int = 8,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 block_props: VBProps = DEFAULT_BLOCK_PROPS):
         if prefix_cache is not None:
             assert prefix_cache.page_size == engine.page_size
         self.engine = engine
+        self.alloc = engine.alloc          # the one memory API
         self.prefill_chunk = prefill_chunk
         self.prefix_cache = prefix_cache
+        self.block_props = block_props
         self.queue: Deque[Request] = deque()
         self.slots: Dict[int, _SlotState] = {}
         self.finished: List[Request] = []
         self._next_rid = 0
         self._admit_seq = 0
-        self._free_pages = engine.n_pages - 1      # host mirror, no syncs
-        self._reserved = [0] * engine.max_seqs     # pages reserved per slot
-        # pages in a slot's span NOT owned by its reservation: mapped-shared
-        # at admission + own pages whose custody moved to the prefix cache
-        self._shared = [0] * engine.max_seqs
-        # (COW clones are counted by the engine: stats["cow_clones"])
         self.stats = {"preemptions": 0, "steps": 0, "prefix_hits": 0,
-                      "prefix_tokens_reused": 0, "cache_evicted_pages": 0}
+                      "prefix_tokens_reused": 0, "cache_evicted_pages": 0,
+                      "swap_outs": 0, "swap_ins": 0, "prefill_tokens": 0}
 
     # -- request intake ------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int,
@@ -106,67 +114,59 @@ class Scheduler:
                 f"request needs {lifetime} tokens > per-slot capacity "
                 f"{cap} (max_pages_per_seq={self.engine.max_pages} × "
                 f"page_size={self.engine.page_size})")
+        # ... and its page budget must fit the pool at all.  Pages the
+        # prefix cache could share cut the budget, so only reject what no
+        # amount of sharing can save (full prompt pages shareable at best).
+        pool = self.engine.n_pages - 1
+        shareable = (len(prompt) // self.engine.page_size
+                     if self.prefix_cache is not None else 0)
+        min_budget = self.alloc.pages_for(lifetime) + 1 - shareable
+        if min_budget > pool:
+            raise ValueError(
+                f"request needs {min_budget} pages over its lifetime > "
+                f"pool capacity {pool} (n_pages={self.engine.n_pages} "
+                f"incl. null page) — it can never be scheduled")
         rid = self._next_rid if rid is None else rid
         self._next_rid = max(self._next_rid, rid) + 1
         self.queue.append(Request(rid, list(prompt), max_new))
         return rid
 
-    # -- page accounting (host mirror of the device free stack) --------------
-    def _pages_for(self, n_tokens: int) -> int:
-        return -(-n_tokens // self.engine.page_size)
-
+    # -- page budgeting (delegated to the allocator's host mirror) -----------
     def _budget_for(self, req: Request, n_shared: int = 0) -> int:
-        # prompt + one decode page of headroom keeps the first decode step
-        # from underflowing the stack right after admission; pages mapped
-        # from the prefix cache are not the slot's to allocate or free.
-        return self._pages_for(len(req.tokens)) + 1 - n_shared
-
-    def _charge(self, slot: int, new_len: int) -> None:
-        """Grow the reservation to cover ``new_len`` tokens (minus pages in
-        the span that the cache, not this slot, owns)."""
-        need = self._pages_for(new_len) - self._shared[slot]
-        if need > self._reserved[slot]:
-            self._free_pages -= need - self._reserved[slot]
-            self._reserved[slot] = need
-
-    def _release_accounting(self, slot: int) -> None:
-        self._free_pages += self._reserved[slot]
-        self._reserved[slot] = 0
-        self._shared[slot] = 0
+        # current span + one decode page of headroom keeps the first decode
+        # step from underflowing the stack right after admission; pages
+        # mapped from the prefix cache are not the block's to allocate.
+        return self.alloc.pages_for(len(req.tokens)) + 1 - n_shared
 
     # -- prefix cache custody ------------------------------------------------
     def _evict_cache(self, want_pages: int) -> int:
         """LRU-drop cold cached prefixes to reclaim ``want_pages``.  Only
         unpinned nodes are dropped, so each page's device refcount is
-        exactly 1 and the mirror can count it freed without a sync."""
+        exactly 1 and the allocator mirror counts it freed without a sync."""
         if self.prefix_cache is None or want_pages <= 0:
             return 0
         pages = self.prefix_cache.evict(want_pages)
         if pages:
-            self.engine.release_cached_pages(pages)
-            self._free_pages += len(pages)
+            self.alloc.release(pages)
             self.stats["cache_evicted_pages"] += len(pages)
         return len(pages)
 
-    def _cache_insert(self, slot: int, st: _SlotState) -> None:
-        """Offer ``slot``'s fully-written pages (prompt, or fed prefix at
-        preemption) to the cache.  Newly cached pages move from the slot's
-        reservation to cache custody: the device will not free them at
-        release (the cache holds a reference), so the mirror must not add
-        them back either."""
+    def _cache_insert(self, st: _SlotState) -> None:
+        """Offer the block's fully-written pages (prompt, or fed prefix at
+        preemption) to the cache.  Newly cached pages change custody from
+        the block's reservation to the cache ledger via the allocator."""
         if self.prefix_cache is None:
             return
         n_full = st.fed // self.engine.page_size
         if n_full == 0:
             return
-        pages = self.engine.read_page_row(slot, n_full)   # control-path sync
+        pages = self.alloc.page_row(st.block, n_full)   # control-path sync
         new_nodes = self.prefix_cache.insert(st.req.tokens, pages)
         if new_nodes:
-            self.engine.retain_pages([n.page for n in new_nodes])
+            self.alloc.retain([n.page for n in new_nodes],
+                              from_block=st.block)
             self.prefix_cache.pin(new_nodes)
             st.pinned.extend(new_nodes)
-            self._reserved[slot] -= len(new_nodes)
-            self._shared[slot] += len(new_nodes)
 
     def _unpin(self, st: _SlotState) -> None:
         if self.prefix_cache is not None and st.pinned:
@@ -179,6 +179,10 @@ class Scheduler:
                       if s not in self.slots]
         while self.queue and free_slots:
             req = self.queue[0]
+            if req.block is not None:
+                if not self._admit_swapped(req, free_slots):
+                    break
+                continue
             match: Optional[PrefixMatch] = None
             if self.prefix_cache is not None:
                 match = self.prefix_cache.lookup(req.tokens)
@@ -186,9 +190,9 @@ class Scheduler:
                 # reclaimed out from under the mapping we're about to make
                 self.prefix_cache.pin(match.all_nodes())
             budget = self._budget_for(req, len(match.pages) if match else 0)
-            if budget > self._free_pages:
-                self._evict_cache(budget - self._free_pages)
-            if budget > self._free_pages and match is not None \
+            if budget > self.alloc.free_pages:
+                self._evict_cache(budget - self.alloc.free_pages)
+            if budget > self.alloc.free_pages and match is not None \
                     and match.partial_node is not None:
                 # the pinned COW source may itself be the page we need
                 # back: losing a < page_size prefill shortcut beats never
@@ -196,25 +200,26 @@ class Scheduler:
                 # page as evictable, so holding it would livelock)
                 self.prefix_cache.unpin([match.partial_node])
                 self.prefix_cache.drop_partial(match)
-                self._evict_cache(budget - self._free_pages)
-            if budget > self._free_pages:
+                self._evict_cache(budget - self.alloc.free_pages)
+            if budget > self.alloc.free_pages:
                 if match is not None:
                     self.prefix_cache.unpin(match.all_nodes())
                 break
             self.queue.popleft()
             slot = free_slots.pop(0)
-            self.engine.admit(slot)
-            st = _SlotState(req, prefill_len=len(req.tokens),
+            blk = self.alloc.alloc(slot, props=self.block_props)
+            st = _SlotState(req, blk, prefill_len=len(req.tokens),
                             admit_seq=self._admit_seq)
             self._admit_seq += 1
+            self.alloc.reserve_pages(blk, budget)
             if match is not None and match.n_tokens:
                 ps = self.engine.page_size
                 if match.pages:
-                    self.engine.map_prefix(slot, match.pages,
-                                           len(match.pages) * ps)
+                    self.alloc.map_shared(blk, match.pages,
+                                          len(match.pages) * ps)
                 if match.partial_len:
-                    self.engine.clone_cow(slot, len(match.pages),
-                                          match.partial_page, match.n_tokens)
+                    self.alloc.cow_break(blk, len(match.pages),
+                                         match.partial_page, match.n_tokens)
                 st.fed = match.n_tokens
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_tokens_reused"] += match.n_tokens
@@ -222,30 +227,56 @@ class Scheduler:
                 self.prefix_cache.record(match, len(req.tokens))
                 st.pinned.extend(match.all_nodes())
             self.slots[slot] = st
-            self._shared[slot] = len(match.pages) if match else 0
-            self._reserved[slot] = budget
-            self._free_pages -= budget
+
+    def _admit_swapped(self, req: Request, free_slots: List[int]) -> bool:
+        """Re-admit a host-swapped request: budget its full span, then
+        restore its exact KV with one device scatter (no re-prefill)."""
+        budget = self._budget_for(req)
+        if budget > self.alloc.free_pages:
+            self._evict_cache(budget - self.alloc.free_pages)
+        if budget > self.alloc.free_pages:
+            return False
+        self.queue.popleft()
+        slot = free_slots.pop(0)
+        blk, req.block = req.block, None
+        self.alloc.swap_in(blk, slot, reserve_pages=budget)
+        st = _SlotState(req, blk, prefill_len=len(req.tokens),
+                        fed=blk.n_tokens, admit_seq=self._admit_seq)
+        self._admit_seq += 1
+        self.slots[slot] = st
+        self.stats["swap_ins"] += 1
+        return True
 
     def _evict(self, slot: int) -> None:
         st = self.slots.pop(slot)
         self._unpin(st)
-        self.engine.evict(slot)
-        self._release_accounting(slot)
+        self.alloc.free(st.block)
         self.finished.append(st.req)
 
     def _preempt_one(self) -> bool:
-        """Release the youngest running slot back to the queue.  Its fed
-        prefix (prompt + generated tokens) is saved into the prefix cache
-        first, so re-admission restores by mapping pages instead of
-        re-prefilling from token zero."""
-        if not self.slots:
+        """Release the youngest running non-PINNED slot back to the queue.
+        The victim's declared properties pick the placement: SWAPPABLE
+        blocks demote to the host tier (exact restore later); otherwise the
+        fed prefix is saved into the prefix cache and the pages discarded."""
+        victims = [s for s, st in self.slots.items() if not st.block.pinned]
+        if not victims:
             return False
-        slot = max(self.slots, key=lambda s: self.slots[s].admit_seq)
+        slot = max(victims, key=lambda s: self.slots[s].admit_seq)
         st = self.slots.pop(slot)
-        self._cache_insert(slot, st)
-        self._unpin(st)
-        self.engine.evict(slot)
-        self._release_accounting(slot)
+        # swap only if the full-span restore budget can ever fit the pool:
+        # a swap image re-admits without the shared-page discount, so a
+        # block admitted mostly via cache sharing could otherwise wedge in
+        # the queue forever; the discard path below keeps the discount
+        fits = self._budget_for(st.req) <= self.engine.n_pages - 1
+        if fits and self.alloc.swap_out(st.block):
+            self._unpin(st)
+            st.req.block = st.block
+            self.stats["swap_outs"] += 1
+        else:
+            st.req.block = None
+            self._cache_insert(st)
+            self._unpin(st)
+            self.alloc.free(st.block)
         st.req.preemptions += 1
         self.queue.appendleft(st.req)    # keep its generated prefix
         self.stats["preemptions"] += 1
@@ -258,13 +289,20 @@ class Scheduler:
         def pending_allocs() -> int:
             return sum(
                 1 for s in dec_slots if s in self.slots and
-                self._pages_for(self.slots[s].fed + 1) - self._shared[s]
-                > self._reserved[s])
-        while self.slots and pending_allocs() > self._free_pages:
-            if self._evict_cache(pending_allocs() - self._free_pages):
+                self.alloc.pages_for(self.slots[s].fed + 1)
+                - self.slots[s].block.shared_pages
+                > self.slots[s].block.reserved_pages)
+        while self.slots and pending_allocs() > self.alloc.free_pages:
+            if self._evict_cache(pending_allocs() - self.alloc.free_pages):
                 continue
             if not self._preempt_one():
-                break
+                # every resident block is PINNED: decoding on would
+                # oversubscribe the pool — fail loudly, not via a reserve
+                # assertion (or silent free-stack underflow under -O)
+                raise RuntimeError(
+                    f"decode needs {pending_allocs()} new pages, pool has "
+                    f"{self.alloc.free_pages} free, and every resident "
+                    f"block is PINNED — nothing can be preempted")
 
     # -- one scheduler tick ---------------------------------------------------
     def step(self) -> List[Request]:
@@ -284,17 +322,19 @@ class Scheduler:
             for s, st in pre.items():
                 seq = st.req.tokens
                 n = min(C, st.prefill_len - st.fed)
-                self._charge(s, st.fed + n)
+                self.alloc.reserve(st.block, st.fed + n)
                 toks[s, :n] = seq[st.fed:st.fed + n]
                 counts[s] = n
             logits = self.engine.prefill_chunk(jnp.asarray(toks),
                                                jnp.asarray(counts))
+            self.stats["prefill_tokens"] += int(counts.sum())
             nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
             for s, st in pre.items():
                 st.fed += int(counts[s])
+                self.alloc.commit(st.block, st.fed)
                 if not st.prefilling:          # prompt done → first token
                     if not st.inserted:        # share the prompt's KV pages
-                        self._cache_insert(s, st)
+                        self._cache_insert(st)
                         st.inserted = True
                     st.req.out.append(int(nxt[s]))
 
@@ -311,12 +351,13 @@ class Scheduler:
                 st = self.slots[s]
                 toks[s] = st.req.tokens[-1]
                 mask[s] = True
-                self._charge(s, st.fed + 1)
+                self.alloc.reserve(st.block, st.fed + 1)
             logits = self.engine.decode(jnp.asarray(toks), jnp.asarray(mask))
             nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
             for s in dec_ids:
                 st = self.slots[s]
                 st.fed += 1
+                self.alloc.commit(st.block, st.fed)
                 st.req.out.append(int(nxt[s]))
 
         # 3. eviction
@@ -338,12 +379,12 @@ class Scheduler:
                 evictable = (self.prefix_cache.evictable_pages
                              if self.prefix_cache else 0)
                 if self._budget_for(self.queue[0]) > \
-                        self._free_pages + evictable:
+                        self.alloc.free_pages + evictable:
                     raise RuntimeError(
                         f"request {self.queue[0].rid} needs "
                         f"{self._budget_for(self.queue[0])} pages; pool has "
-                        f"{self._free_pages} free + {evictable} evictable "
-                        f"cached")
+                        f"{self.alloc.free_pages} free + {evictable} "
+                        f"evictable cached")
         if self.queue or self.slots:
             raise RuntimeError(
                 f"run() exhausted {max_steps} steps with "

@@ -166,20 +166,20 @@ def test_cached_prefill_logits_match_full_prefill(setup):
         return eng.prefill_chunk(jnp.asarray(t), jnp.asarray(n))
 
     # slot 0: full prefill (the oracle); its 2 full pages become "cached"
-    eng.admit(0)
+    blocks = [eng.alloc.alloc(0)]
     feed(0, prompt)
-    pages = eng.read_page_row(0, 2)
-    eng.retain_pages(pages)
+    pages = eng.alloc.page_row(blocks[0], 2)
+    eng.alloc.retain(pages)
 
     # slot 1: map both full pages, prefill only the 2-token suffix
-    eng.admit(1)
-    eng.map_prefix(1, pages, 8)
+    blocks.append(eng.alloc.alloc(1))
+    eng.alloc.map_shared(blocks[1], pages, 8)
     feed(1, prompt[8:])
 
     # slot 2: map page 0, COW-clone page 1 at 3 of 4 tokens, prefill rest
-    eng.admit(2)
-    eng.map_prefix(2, pages[:1], 4)
-    eng.clone_cow(2, 1, pages[1], 7)
+    blocks.append(eng.alloc.alloc(2))
+    eng.alloc.map_shared(blocks[2], pages[:1], 4)
+    eng.alloc.cow_break(blocks[2], 1, pages[1], 7)
     feed(2, prompt[7:])
 
     np.testing.assert_array_equal(np.asarray(eng.state.seq_lens[:3]),
@@ -197,10 +197,10 @@ def test_cached_prefill_logits_match_full_prefill(setup):
     np.testing.assert_allclose(out[2], out[0], rtol=1e-5, atol=1e-5)
 
     # shared pages survive one slot's release, die with the cache
-    for s in range(3):
-        eng.evict(s)
+    for blk in blocks:
+        eng.alloc.free(blk)
     assert eng.pages_in_use == len(pages)       # only the cached pages
-    eng.release_cached_pages(pages)
+    eng.alloc.release(pages)
     assert eng.pages_in_use == 0
 
 
@@ -231,12 +231,12 @@ def test_scheduler_cache_on_matches_cache_off(setup):
     assert on == off                                   # logits-equivalent
     assert cache.hit_rate > 0
     assert sched.stats["prefix_tokens_reused"] > 0
-    assert eng_on.stats["cow_clones"] > 0              # 10 % 4 != 0
+    assert eng_on.alloc.stats["cow_clones"] > 0        # 10 % 4 != 0
     # host mirror exact; only cache custody differs from the cache-off run
-    assert eng_on.free_pages == sched._free_pages
+    assert eng_on.free_pages == sched.alloc.free_pages
     assert eng_on.pages_in_use == cache.n_pages
     # drain: the full admit -> share -> COW -> release cycle returns all
-    eng_on.release_cached_pages(cache.evict(cache.n_pages))
+    eng_on.alloc.release(cache.evict(cache.n_pages))
     assert eng_on.pages_in_use == 0
     assert eng_off.pages_in_use == 0
 
@@ -259,7 +259,7 @@ def test_partial_match_does_not_block_its_own_eviction(setup):
     finished = sched.run()
     assert len(finished) == 2 and all(len(r.out) == 1 for r in finished)
     assert sched.stats["cache_evicted_pages"] >= 1
-    assert eng.free_pages == sched._free_pages
+    assert eng.free_pages == sched.alloc.free_pages
 
 
 def test_cache_eviction_under_memory_pressure(setup):
@@ -280,8 +280,8 @@ def test_cache_eviction_under_memory_pressure(setup):
                                 page_size=2, max_seqs=1, max_pages_per_seq=8)
     assert on == off
     assert sched.stats["cache_evicted_pages"] > 0
-    assert eng.free_pages == sched._free_pages
-    eng.release_cached_pages(cache.evict(cache.n_pages))
+    assert eng.free_pages == sched.alloc.free_pages
+    eng.alloc.release(cache.evict(cache.n_pages))
     assert eng.pages_in_use == 0
 
 
@@ -311,6 +311,6 @@ def test_preemption_resume_is_exact_and_restores_from_cache(setup):
     assert s2.stats["preemptions"] >= 1
     assert cached == roomy
     assert s2.stats["prefix_tokens_reused"] > 0
-    assert eng.free_pages == s2._free_pages
-    eng.release_cached_pages(cache.evict(cache.n_pages))
+    assert eng.free_pages == s2.alloc.free_pages
+    eng.alloc.release(cache.evict(cache.n_pages))
     assert eng.pages_in_use == 0

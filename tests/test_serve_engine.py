@@ -37,7 +37,7 @@ def test_decode_batch_matches_legacy(setup):
                       max_pages_per_seq=8)
     for s in (0, 2):
         srv.admit(s)
-        eng.admit(s)
+        eng.alloc.alloc(s)
     mask = jnp.asarray([True, False, True, False])
     rng = np.random.default_rng(1)
     for step in range(7):              # crosses page boundaries (ps=4)
@@ -61,8 +61,8 @@ def test_prefill_chunk_matches_tokenwise_decode(setup):
     eng_b = PagedEngine(cfg, params, n_pages=32, page_size=4, max_seqs=2,
                         max_pages_per_seq=4)
     for s in range(2):
-        eng_a.admit(s)
-        eng_b.admit(s)
+        eng_a.alloc.alloc(s)
+        eng_b.alloc.alloc(s)
     logits_a = eng_a.prefill_chunk(
         jnp.asarray(prompt), jnp.full((2,), prompt.shape[1], jnp.int32))
     mask = jnp.ones((2,), bool)
@@ -91,8 +91,9 @@ def test_scheduler_reuses_freed_pages(setup):
     assert len(finished) == n_requests
     assert all(len(r.out) == 4 for r in finished)
     assert eng.free_pages == 12                 # everything returned
-    assert eng.free_pages == sched._free_pages  # host mirror stayed exact
-    assert eng.stats["releases"] == n_requests
+    # the allocator's host mirror stayed exact
+    assert eng.free_pages == eng.alloc.free_pages
+    assert eng.alloc.stats["frees"] == n_requests
 
 
 def test_release_slot_returns_pages_to_free_stack():
@@ -120,8 +121,8 @@ def test_decode_step_no_host_transfers(setup):
     cfg, params = setup
     eng = PagedEngine(cfg, params, n_pages=32, page_size=4, max_seqs=2,
                       max_pages_per_seq=4)
-    eng.admit(0)
-    eng.admit(1)
+    eng.alloc.alloc(0)
+    eng.alloc.alloc(1)
     mask = jax.device_put(jnp.ones((2,), bool))
     toks = jax.device_put(jnp.asarray([1, 2], jnp.int32))
     eng.decode(toks, mask)                       # compile/warmup
@@ -163,7 +164,15 @@ def test_scheduler_rejects_oversized_request(setup):
     # intake — past the row the device scatter would silently corrupt KV
     with pytest.raises(ValueError, match="per-slot capacity"):
         sched.add_request(list(range(12)), max_new=2)
-    # fits a slot (8 ≤ 8 tokens) but not the 3-page pool: detected at run
+    # fits a slot (8 ≤ 8 tokens) but its 5-page budget can never fit the
+    # 3-page pool: also refused at intake now (used to fail late, in run())
+    with pytest.raises(ValueError, match="pool capacity"):
+        sched.add_request(list(range(6)), max_new=2)
+    # with a prefix cache the prompt pages *could* be shared, so intake
+    # accepts — but nothing is cached, so run() detects the impossibility
+    from repro.serve.prefix_cache import PrefixCache
+    sched = Scheduler(eng, prefill_chunk=4,
+                      prefix_cache=PrefixCache(page_size=2))
     sched.add_request(list(range(6)), max_new=2)
     with pytest.raises(RuntimeError, match="pages"):
         sched.run()

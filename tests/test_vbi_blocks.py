@@ -1,0 +1,349 @@
+"""The VBI memory API (core/vbi/blocks.py — DESIGN.md §6):
+
+  * VirtualBlock lifecycle through the one allocator: double-free is a
+    no-op, reservations return to the mirror, the mirror never promises
+    more pages than the device free stack holds;
+  * refcount conservation under random admit/feed/share/COW/swap/release
+    traces: every in-use device page is referenced, every reference is
+    accounted to a mapper (slot row or cache ledger), free-stack pages are
+    distinct and unreferenced;
+  * declared properties drive placement: PINNED / non-SWAPPABLE blocks are
+    never swapped, the host tier enforces its capacity;
+  * swap-resume exactness: a request preempted to the host tier resumes
+    token-for-token identical to an uninterrupted run, with (almost) no
+    re-prefill;
+  * the legacy PagedKVManager wrapped behind the same interface is the
+    reservation-arithmetic oracle;
+  * the API boundary holds: no module outside core/vbi/ calls the raw page
+    ops (the ``make check-vbi-api`` gate, enforced in-suite).
+"""
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vbi.address_space import VBProps
+from repro.core.vbi.blocks import (LegacyKVAllocator, PagePool, VBIAllocator)
+from repro.core.vbi.kvcache import PagedKVManager, reserve_positions
+
+
+def _mk(n_pages=33, page_size=2, max_seqs=4, rowP=8, swap=0):
+    pool = PagePool(n_layers=1, n_pages=n_pages, page_size=page_size,
+                    n_kv=1, head_dim=2, max_seqs=max_seqs,
+                    max_pages_per_seq=rowP)
+    return pool, VBIAllocator(pool, host_swap_pages=swap)
+
+
+def _feed(pool, al, blk, n=1):
+    """Advance a block by ``n`` tokens the way the engine's jitted step
+    does: reserve (host mirror), then device delayed allocation."""
+    for _ in range(n):
+        al.reserve(blk, blk.n_tokens + 1)
+        mask = np.zeros((pool.max_seqs,), bool)
+        mask[blk.slot] = True
+        pool.state, _ = reserve_positions(pool.state, jnp.asarray(mask))
+        al.commit(blk, blk.n_tokens + 1)
+
+
+def _conservation(pool, al, blocks, ledger):
+    """The invariant the one-allocator design exists to keep: refcounts,
+    free stack, and host mirror all tell the same story."""
+    st = pool.state
+    refc = np.asarray(st.page_refcounts)
+    free_top = int(st.free_top)
+    in_use = pool.n_pages - 1 - free_top
+    assert int((refc > 0).sum()) == in_use
+    stack = np.asarray(st.free_stack[:free_top]).tolist()
+    assert len(set(stack)) == free_top          # free pages are distinct
+    assert (refc[stack] == 0).all()             # ... and unreferenced
+    # every reference is accounted to a mapper: a slot's mapped row or the
+    # cache ledger — sum(page_refcounts) == mappers, in-use == unique pages
+    expected_refs = len(ledger)
+    mapped = set(ledger)
+    pt = np.asarray(st.page_table)
+    lens = np.asarray(st.seq_lens)
+    for blk in blocks:
+        if blk.status != "resident":
+            continue
+        n = -(-int(lens[blk.slot]) // pool.page_size)
+        expected_refs += n
+        mapped.update(pt[blk.slot, :n].tolist())
+    assert int(refc.sum()) == expected_refs
+    assert in_use == len(mapped)
+    # the mirror is conservative: never promises more than the device has
+    assert al.free_pages <= free_top
+
+
+def test_block_lifecycle_and_double_free_noop():
+    pool, al = _mk()
+    blk = al.alloc(0)
+    _feed(pool, al, blk, 5)                      # 3 pages @ ps=2
+    assert al.pages_in_use == 3 and al.free_pages == 32 - 3
+    al.free(blk)
+    assert al.pages_in_use == 0 and al.free_pages == 32
+    top, refc = int(pool.state.free_top), np.asarray(pool.state.page_refcounts)
+    al.free(blk)                                 # double-free: no-op
+    assert int(pool.state.free_top) == top and al.free_pages == 32
+    np.testing.assert_array_equal(np.asarray(pool.state.page_refcounts), refc)
+    assert blk.status == "freed"
+    al.alloc(0)                                  # slot is reusable after
+
+
+def test_refcount_conservation_random_traces():
+    """Property-style sweep: random admit/feed/share/COW/swap/release
+    traces, conservation checked after every op."""
+    ps, rowP, max_seqs = 2, 8, 4
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        pool, al = _mk(n_pages=33, page_size=ps, max_seqs=max_seqs,
+                       rowP=rowP, swap=16)
+        blocks = []                  # every block ever allocated
+        ledger = []                  # pages on the cache ledger
+        pinned_by = {}               # ledger page -> mapping live blocks
+        for _ in range(70):
+            resident = [b for b in blocks if b.status == "resident"]
+            swapped = [b for b in blocks if b.status == "swapped"]
+            free_slots = [s for s in range(max_seqs)
+                          if s not in al.blocks]
+            op = rng.choice(["alloc", "feed", "cache_insert", "map_shared",
+                             "cow", "release_cache", "swap_out", "swap_in",
+                             "free", "double_free"])
+            if op == "alloc" and free_slots:
+                blocks.append(al.alloc(int(rng.choice(free_slots))))
+            elif op == "feed" and resident:
+                blk = resident[rng.integers(len(resident))]
+                n = int(rng.integers(1, ps * 2 + 1))
+                n = min(n, rowP * ps - blk.n_tokens)
+                need = (al.pages_for(blk.n_tokens + n) - blk.shared_pages
+                        - blk.reserved_pages)
+                if n > 0 and need <= al.free_pages:
+                    _feed(pool, al, blk, n)
+            elif op == "cache_insert" and resident:
+                # scheduler protocol: move owned full pages to the ledger
+                blk = resident[rng.integers(len(resident))]
+                n_full = blk.n_tokens // ps
+                row = al.page_row(blk, n_full)
+                new = [p for p in row[blk.shared_pages:]
+                       if p not in ledger]
+                if new and blk.reserved_pages >= len(new):
+                    al.retain(new, from_block=blk)
+                    ledger.extend(new)
+                    # the inserting slot still maps these pages: pin them
+                    # (PrefixCache.pin protocol) until it frees/swaps
+                    for p in new:
+                        pinned_by.setdefault(p, set()).add(blk.bid)
+            elif op == "map_shared" and ledger and free_slots:
+                k = int(rng.integers(1, min(len(ledger), rowP - 1) + 1))
+                pages = list(rng.choice(ledger, size=k, replace=False))
+                blk = al.alloc(int(rng.choice(free_slots)))
+                blocks.append(blk)
+                al.map_shared(blk, pages, k * ps)
+                for p in pages:
+                    pinned_by.setdefault(p, set()).add(blk.bid)
+            elif op == "cow" and ledger and free_slots \
+                    and al.free_pages >= 1:
+                src = int(rng.choice(ledger))
+                blk = al.alloc(int(rng.choice(free_slots)))
+                blocks.append(blk)
+                al.reserve_pages(blk, 1)         # the clone pops one page
+                al.cow_break(blk, 0, src, int(rng.integers(1, ps)))
+            elif op == "release_cache" and ledger:
+                # only unpinned ledger pages (device refcount exactly 1),
+                # as PrefixCache.evict guarantees
+                live = {p for p, bids in pinned_by.items()
+                        if any(b.bid in bids and b.status == "resident"
+                               for b in blocks)}
+                frees = [p for p in ledger if p not in live]
+                if frees:
+                    page = int(rng.choice(frees))
+                    al.release([page])
+                    ledger.remove(page)
+            elif op == "swap_out" and resident:
+                blk = resident[rng.integers(len(resident))]
+                if al.swap_out(blk):
+                    for bids in pinned_by.values():
+                        bids.discard(blk.bid)
+            elif op == "swap_in" and swapped and free_slots:
+                blk = swapped[rng.integers(len(swapped))]
+                if al.pages_for(blk.n_tokens) <= al.free_pages:
+                    al.swap_in(blk, int(rng.choice(free_slots)))
+            elif op in ("free", "double_free") and (resident or swapped):
+                pick = resident + swapped
+                blk = pick[rng.integers(len(pick))]
+                al.free(blk)
+                for bids in pinned_by.values():
+                    bids.discard(blk.bid)
+                if op == "double_free":
+                    top = int(pool.state.free_top)
+                    al.free(blk)                 # must stay a no-op
+                    assert int(pool.state.free_top) == top
+            _conservation(pool, al, blocks, ledger)
+        # drain everything: the pool must come back whole
+        for blk in blocks:
+            al.free(blk)
+        al.release(ledger)
+        assert al.pages_in_use == 0
+        assert al.free_pages == int(pool.state.free_top) == pool.n_pages - 1
+
+
+def test_swap_out_respects_declared_properties():
+    pool, al = _mk(swap=2)
+    pinned = al.alloc(0, props=VBProps.KV_CACHE | VBProps.SWAPPABLE
+                      | VBProps.PINNED)
+    _feed(pool, al, pinned, 3)
+    assert not al.swap_out(pinned)               # PINNED: never demoted
+    plain = al.alloc(1, props=VBProps.KV_CACHE)
+    _feed(pool, al, plain, 3)
+    assert not al.swap_out(plain)                # not declared SWAPPABLE
+    ok = al.alloc(2)                             # default props: SWAPPABLE
+    _feed(pool, al, ok, 3)
+    assert al.swap_out(ok)                       # 2 pages fill the tier
+    late = al.alloc(3)
+    _feed(pool, al, late, 3)
+    assert not al.swap_out(late)                 # tier capacity enforced
+    assert al.stats["swap_rejects"] == 1
+
+
+def test_legacy_manager_wrapped_as_oracle():
+    """The pre-VBI PagedKVManager behind the same lifecycle interface
+    agrees with the allocator's reservation arithmetic op for op."""
+    mgr = PagedKVManager(n_layers=1, n_pages=33, page_size=2, n_kv=1,
+                         head_dim=2, max_seqs=4)
+    legacy = LegacyKVAllocator(mgr)
+    pool, al = _mk()
+    rng = np.random.default_rng(7)
+    pairs = {}                                    # slot -> (legacy, vbi)
+    for _ in range(60):
+        op = rng.choice(["alloc", "reserve", "free"])
+        if op == "alloc":
+            free = [s for s in range(4) if s not in pairs]
+            if free:
+                s = int(rng.choice(free))
+                pairs[s] = (legacy.alloc(s), al.alloc(s))
+        elif op == "reserve" and pairs:
+            s = int(rng.choice(list(pairs)))
+            lb, vb = pairs[s]
+            n = int(rng.integers(1, 13))
+            need = al.pages_for(n) - vb.reserved_pages
+            if need <= al.free_pages:
+                legacy.reserve(lb, n)
+                al.reserve(vb, n)
+        elif op == "free" and pairs:
+            s = int(rng.choice(list(pairs)))
+            lb, vb = pairs.pop(s)
+            legacy.free(lb)
+            al.free(vb)
+            legacy.free(lb)                      # double-free: both no-ops
+            al.free(vb)
+        assert legacy.pages_in_use == (pool.n_pages - 1) - al.free_pages
+    with pytest.raises(NotImplementedError):
+        legacy.map_shared(None, [], 0)
+
+
+def test_swap_resume_is_token_exact():
+    """Satellite: preempt a mid-decode request under memory pressure, swap
+    out, resume — token-for-token equal to an uninterrupted greedy run,
+    restored by one device scatter instead of re-prefilling."""
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.scheduler import Scheduler
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 2).tolist() for _ in range(2)]
+
+    def run(n_pages, swap):
+        eng = PagedEngine(cfg, params, n_pages=n_pages, page_size=2,
+                          max_seqs=2, max_pages_per_seq=4,
+                          host_swap_pages=swap)
+        sched = Scheduler(eng, prefill_chunk=4)
+        for p in prompts:
+            sched.add_request(p, max_new=6)
+        fin = sched.run()
+        return {r.rid: r.out for r in fin}, eng, sched
+
+    roomy, _, _ = run(32, 0)
+    discard, _, s_d = run(6, 0)                 # preempt → re-prefill
+    swapped, eng, s_s = run(6, 32)              # preempt → host swap tier
+    assert s_d.stats["preemptions"] >= 1 and s_s.stats["preemptions"] >= 1
+    assert s_s.stats["swap_outs"] >= 1 and s_s.stats["swap_ins"] >= 1
+    assert swapped == roomy == discard          # bit-identical greedy
+    # the swap path restored KV instead of re-prefilling the fed span
+    assert s_s.stats["prefill_tokens"] < s_d.stats["prefill_tokens"]
+    assert eng.alloc.stats["swapped_in_pages"] >= 1
+    assert eng.free_pages == s_s.alloc.free_pages == 5   # mirror exact
+    assert eng.alloc.swap.used_pages == 0       # tier drained
+
+
+def test_preempt_prefers_discard_when_swap_restore_cannot_fit():
+    """A swap image re-admits with its full span budgeted (no shared-page
+    discount), so a victim whose span outgrew the pool must take the
+    discard path — swapping it would wedge it in the queue forever."""
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.scheduler import Scheduler
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = PagedEngine(cfg, params, n_pages=8, page_size=2, max_seqs=1,
+                      max_pages_per_seq=8, host_swap_pages=64)
+    sched = Scheduler(eng, prefill_chunk=4)
+    sched.add_request([1, 2], max_new=2)
+    sched.step()                                 # admit + prefill
+    st = next(iter(sched.slots.values()))
+    # pretend the span already grew past what the 7-page pool could ever
+    # re-admit (budget pages_for(15)+1 = 9 > 7)
+    st.req.out.extend([0] * 13)
+    assert sched._preempt_one()
+    assert sched.stats["swap_outs"] == 0         # discard path chosen
+    assert st.req.block is None
+    assert eng.alloc.swap.images == {}
+
+
+def test_all_pinned_pool_exhaustion_fails_loudly():
+    """PINNED blocks are never preempted; if decode cannot get pages the
+    scheduler must raise a clear error instead of oversubscribing."""
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.scheduler import Scheduler
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = PagedEngine(cfg, params, n_pages=6, page_size=2, max_seqs=2,
+                      max_pages_per_seq=4)
+    sched = Scheduler(eng, prefill_chunk=4,
+                      block_props=VBProps.KV_CACHE | VBProps.PINNED)
+    rng = np.random.default_rng(0)
+    sched.add_request(rng.integers(0, cfg.vocab, 2).tolist(), max_new=6)
+    sched.add_request(rng.integers(0, cfg.vocab, 2).tolist(), max_new=6)
+    with pytest.raises(RuntimeError, match="PINNED"):
+        sched.run()
+
+
+def test_raw_page_ops_gated_to_core_vbi():
+    """The ``make check-vbi-api`` contract, enforced in-suite: no module
+    outside core/vbi/ calls the raw page ops directly — the VBIAllocator
+    is the only door."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    # every raw PagedServeState lifecycle op (reserve_positions and
+    # write_token_kv are the jitted fast path, owned by the engine)
+    pat = re.compile(
+        r"\b(admit_slot|release_slot|map_prefix|clone_page_cow"
+        r"|retain_pages|release_pages|snapshot_block|restore_block)\s*\(")
+    bad = []
+    for base in ("src/repro", "benchmarks"):
+        for p in sorted((root / base).rglob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            if rel.startswith("src/repro/core/vbi/"):
+                continue
+            for i, line in enumerate(p.read_text().splitlines(), 1):
+                if pat.search(line):
+                    bad.append(f"{rel}:{i}: {line.strip()}")
+    assert not bad, "raw page ops outside core/vbi/:\n" + "\n".join(bad)
