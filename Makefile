@@ -5,13 +5,18 @@
 # BENCH_serving.json at the repo root so the serving trajectory is tracked
 # PR over PR.  `make check-vbi-api` is the VBI API-boundary gate: every KV
 # page lifecycle mutation must flow through core/vbi/blocks.py::VBIAllocator
-# (DESIGN.md §6) — no module outside core/vbi/ may call the raw page ops.
+# (DESIGN.md §6) — no module outside core/vbi/ may call the raw page ops,
+# and the jitted fast-path ops (reserve_positions / write_token_kv /
+# fused_decode_scan) are gated to serve/engine.py, so the horizon code
+# cannot grow a side channel around the reservation protocol (DESIGN.md §7).
+# `make bench-serve-horizon` sweeps the fused decode horizon K on the
+# decode-heavy workload.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test check-vbi-api bench-serve bench-serve-prefix bench-serve-swap \
-	bench serve-demo
+	bench-serve-horizon bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -33,6 +38,9 @@ bench-serve-prefix:
 
 bench-serve-swap:
 	$(PYTHON) -m benchmarks.bench_lm_serving --smoke --workload swap-pressure
+
+bench-serve-horizon:
+	$(PYTHON) -m benchmarks.bench_lm_serving --smoke --workload decode-heavy
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -13,9 +13,11 @@ cache (serve/prefix_cache.py, DESIGN.md §5.1) on vs. off, plus cache hit
 rate and prefill tokens skipped — and (6) the swap-pressure workload:
 request throughput under forced preemption with the VBI host swap tier
 (core/vbi/blocks.py, DESIGN.md §6) vs. discard-and-re-prefill, plus
-swap-in/out counts.  ``--smoke`` writes the machine-readable
-``BENCH_serving.json`` at the repo root so the serving trajectory is
-tracked PR over PR."""
+swap-in/out counts — and (7) the decode-heavy workload: the fused decode
+horizon (DESIGN.md §7) swept over K ∈ {1,4,8,16}, reporting tok/s,
+dispatches/token and host syncs/token with bit-identical outputs across
+K.  ``--smoke`` writes the machine-readable ``BENCH_serving.json`` at
+the repo root so the serving trajectory is tracked PR over PR."""
 from __future__ import annotations
 
 import argparse
@@ -255,8 +257,90 @@ def bench_swap_pressure(n_requests: int = 6, prompt_len: int = 64,
     return lines, metrics
 
 
+def bench_decode_heavy(n_requests: int = 8, prompt_len: int = 4,
+                       max_new: int = 65, n_slots: int = 4,
+                       horizons: "tuple[int, ...]" = (1, 4, 8, 16)
+                       ) -> "tuple[list[str], dict]":
+    """The fused decode horizon (DESIGN.md §7) on a decode-heavy workload:
+    long generations, short prompts — the regime where per-dispatch and
+    per-sync host overhead dominates per-token cost.  Sweeps the horizon
+    K; for each K reports end-to-end tok/s, jitted dispatches per decoded
+    token, and host syncs per decoded token, and proves every K produces
+    bit-identical greedy outputs (on-device sampling/stopping ≡ host
+    loop)."""
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.scheduler import Scheduler
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    page_size = 8
+    lifetime = prompt_len + max_new
+    per_slot = -(-lifetime // page_size) + 1
+    n_pages = 1 + n_slots * per_slot
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, prompt_len).tolist()
+               for _ in range(n_requests)]
+    eng = PagedEngine(cfg, params, n_pages=n_pages, page_size=page_size,
+                      max_seqs=n_slots, max_pages_per_seq=per_slot)
+
+    def once(k):
+        sched = Scheduler(eng, prefill_chunk=8, decode_horizon=k)
+        for p in prompts:
+            sched.add_request(p, max_new=max_new)
+        d0 = eng.stats["decode_dispatches"]
+        t0 = time.perf_counter()
+        fin = sched.run()
+        dt = time.perf_counter() - t0
+        return (dt, {r.rid: r.out for r in fin}, sched,
+                eng.stats["decode_dispatches"] - d0)
+
+    total_new = n_requests * max_new              # tokens generated per run
+    # first token comes from prefill; max(1,..) keeps the per-token rates
+    # well-defined in the degenerate --max-new 1 case (no decode at all)
+    decode_tokens = max(1, n_requests * (max_new - 1))
+    sweep, baseline_out, base_tok_s = {}, None, None
+    for k in horizons:
+        once(k)                                   # compile/warmup this K
+        dt, out, sched, dispatches = once(k)
+        tok_s = total_new / dt
+        if k == horizons[0]:
+            baseline_out, base_tok_s = out, tok_s
+        sweep[str(k)] = {
+            "tok_s": tok_s,
+            "dispatches_per_token": dispatches / decode_tokens,
+            "host_syncs_per_token": sched.stats["host_syncs"] / decode_tokens,
+            "speedup_vs_k1": tok_s / base_tok_s,
+            "outputs_match_k1": out == baseline_out,
+        }
+    metrics = {
+        "n_requests": n_requests, "prompt_len": prompt_len,
+        "max_new": max_new, "n_slots": n_slots,
+        "horizons": sweep,
+        "speedup_k8_vs_k1": sweep["8"]["speedup_vs_k1"] if "8" in sweep
+        else None,
+        "outputs_match": all(v["outputs_match_k1"] for v in sweep.values()),
+    }
+    lines = [emit(
+        "lm_serving/decode_horizon_sweep",
+        1e6 / sweep[str(horizons[-1])]["tok_s"],
+        " ".join(f"K={k}:{v['tok_s']:.1f}tok/s" for k, v in sweep.items())
+        + f" match={metrics['outputs_match']}")]
+    return lines, metrics
+
+
 def write_bench_json(results: dict) -> None:
-    BENCH_JSON.write_text(json.dumps(results, indent=2, sort_keys=True)
+    # merge into the existing file: a single-workload run must not wipe
+    # the other sections tracked PR over PR
+    merged = {}
+    if BENCH_JSON.exists():
+        try:
+            merged = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            merged = {}
+    merged.update(results)
+    BENCH_JSON.write_text(json.dumps(merged, indent=2, sort_keys=True)
                           + "\n")
     print(f"[bench] wrote {BENCH_JSON}")
 
@@ -294,10 +378,12 @@ def run() -> list[str]:
     eng_lines, eng_metrics = bench_serve_engine()
     pre_lines, pre_metrics = bench_shared_prefix()
     swp_lines, swp_metrics = bench_swap_pressure()
-    lines += eng_lines + pre_lines + swp_lines
+    hor_lines, hor_metrics = bench_decode_heavy()
+    lines += eng_lines + pre_lines + swp_lines + hor_lines
     write_bench_json({"engine_vs_legacy": eng_metrics,
                       "shared_prefix": pre_metrics,
-                      "swap_pressure": swp_metrics})
+                      "swap_pressure": swp_metrics,
+                      "decode_heavy": hor_metrics})
     return lines
 
 
@@ -307,10 +393,12 @@ if __name__ == "__main__":
                     help="serving comparisons only (CI fast path)")
     ap.add_argument("--workload", default="all",
                     choices=("engine", "shared-prefix", "swap-pressure",
-                             "all"),
+                             "decode-heavy", "all"),
                     help="which serving workload(s) to run under --smoke")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--shared-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=65,
+                    help="generation length for --workload decode-heavy")
     args = ap.parse_args()
     if args.smoke:
         print("name,us_per_call,derived")
@@ -323,6 +411,10 @@ if __name__ == "__main__":
         if args.workload in ("swap-pressure", "all"):
             _, results["swap_pressure"] = bench_swap_pressure(
                 n_requests=(6 if args.requests == 32 else args.requests))
+        if args.workload in ("decode-heavy", "all"):
+            _, results["decode_heavy"] = bench_decode_heavy(
+                n_requests=(8 if args.requests == 32 else args.requests),
+                max_new=args.max_new)
         write_bench_json(results)
     else:
         run()

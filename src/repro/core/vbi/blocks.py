@@ -158,7 +158,8 @@ class VBIAllocator:
                       "prefix_pages_mapped": 0, "cow_clones": 0,
                       "cached_page_retains": 0, "cached_page_releases": 0,
                       "swap_outs": 0, "swap_ins": 0, "swapped_out_pages": 0,
-                      "swapped_in_pages": 0, "swap_rejects": 0}
+                      "swapped_in_pages": 0, "swap_rejects": 0,
+                      "unreserved_pages": 0}
 
     # -- geometry / budget ---------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -233,10 +234,33 @@ class VBIAllocator:
         self.reserve_pages(
             block, self.pages_for(n_tokens) - block.shared_pages)
 
+    def reserve_span(self, block: VirtualBlock, n_tokens: int,
+                     horizon: int) -> None:
+        """The paper's early reservation extended from one page to a
+        K-token decode span (DESIGN.md §7): charge the mirror for the
+        worst case of ``horizon`` more tokens past ``n_tokens`` *before*
+        the fused horizon dispatches, so the device free stack can never
+        underflow mid-scan no matter where within the horizon each slot's
+        page boundaries fall."""
+        self.reserve(block, n_tokens + horizon)
+
     def commit(self, block: VirtualBlock, n_tokens: int) -> None:
         """Record that ``n_tokens`` are now written on device (mirror of
         ``seq_lens`` — what a swap image must cover)."""
         block.n_tokens = n_tokens
+
+    def unreserve(self, block: VirtualBlock, n_tokens: int) -> None:
+        """Horizon-boundary reconciliation (DESIGN.md §7): shrink the
+        block's reservation to exactly cover ``n_tokens``.  A slot that
+        stopped on device mid-horizon (EOS) popped fewer pages than the
+        worst-case span charged up front; the surplus returns to the
+        mirror here.  Never shrinks below the pages the block actually
+        owns on device, so the mirror stays exact."""
+        keep = max(0, self.pages_for(n_tokens) - block.shared_pages)
+        if keep < block.reserved_pages:
+            self.free_pages += block.reserved_pages - keep
+            self.stats["unreserved_pages"] += block.reserved_pages - keep
+            block.reserved_pages = keep
 
     # -- sharing / COW (the prefix-cache face of the API) ---------------------
     def map_shared(self, block: VirtualBlock, page_ids: Sequence[int],

@@ -23,6 +23,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from .address_space import VBProps
 from .mtl import MTL, PhysicalMemory
@@ -367,6 +368,48 @@ def reserve_positions(state: PagedServeState, slot_mask: jax.Array
         seq_lens=positions + slot_mask.astype(jnp.int32),
         free_top=state.free_top - needs.sum(dtype=jnp.int32),
         page_refcounts=refc), positions
+
+
+def fused_decode_scan(token_step, state: PagedServeState, tokens: jax.Array,
+                      slot_mask: jax.Array, steps_left: jax.Array,
+                      length: int, eos_id: int = -1
+                      ) -> Tuple[jax.Array, PagedServeState]:
+    """The fused decode horizon: ``length`` token steps inside ONE
+    ``lax.scan``, with greedy sampling, token feedback and per-slot stop
+    masking all on device (DESIGN.md §7).
+
+    This is the thesis' critique applied to the decode loop itself: the
+    single-step engine still kept the host in the loop of every token
+    (dispatch → argmax sync → bookkeeping → next dispatch).  Here the loop
+    lives next to the KV pages: ``token_step(state, tokens, mask) ->
+    (logits, state)`` (the engine's jitted layer stack) is scanned
+    ``length`` times; each step argmaxes its logits on device, feeds the
+    winner back as the next step's input, and retires slots whose budget
+    (``steps_left``) is spent or that emitted ``eos_id``.  A retired slot's
+    remaining steps are fully masked — no KV write, no ``seq_lens`` bump,
+    no page pop — so device state is exactly what ``length`` single steps
+    with host-side stopping would have produced.
+
+    Returns ``(block, state)`` where ``block[k, s]`` is the token slot
+    ``s`` emitted at step ``k``, or ``-1`` on masked lanes (token ids are
+    non-negative, so ``-1`` is an unambiguous sentinel the host strips at
+    the horizon boundary — its ONE sync per horizon).  ``eos_id=-1``
+    disables EOS stopping.
+    """
+    def step(carry, _):
+        state, toks, left, stopped = carry
+        active = slot_mask & (left > 0) & ~stopped
+        logits, state = token_step(state, toks, active)
+        nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        emitted = jnp.where(active, nxt, -1)
+        stopped = stopped | (active & (nxt == eos_id))
+        toks = jnp.where(active, nxt, toks)
+        return (state, toks, left - active.astype(jnp.int32), stopped), emitted
+
+    stopped = jnp.zeros_like(slot_mask)
+    (state, _, _, _), block = lax.scan(
+        step, (state, tokens, steps_left, stopped), None, length=length)
+    return block, state
 
 
 def write_token_kv(k_pages: jax.Array, v_pages: jax.Array, layer,

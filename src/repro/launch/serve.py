@@ -12,8 +12,12 @@ page sharing, DESIGN.md §5.1; disable with ``--no-prefix-cache``).
 ``--shared-prefix N`` prepends an N-token system prompt to every request
 so the sharing is visible in the stats.  ``--host-swap-pages N`` enables
 the host swap tier: preemption victims are demoted to host memory and
-resume with one device scatter instead of re-prefilling.  ``--legacy``
-runs the per-sequence reference path (serve/paged.py) for comparison.
+resume with one device scatter instead of re-prefilling.
+``--decode-horizon K`` sets the fused decode horizon (DESIGN.md §7):
+decoding slots advance K tokens per jitted dispatch — sampling, token
+feedback and stopping all on device — so the host syncs once per horizon
+instead of once per token.  ``--legacy`` runs the per-sequence reference
+path (serve/paged.py) for comparison.
 """
 from __future__ import annotations
 
@@ -61,6 +65,11 @@ def main(argv=None) -> None:
                     help="host swap tier capacity in pages (0 = off); "
                          "SWAPPABLE preemption victims demote to host "
                          "memory and resume without re-prefilling")
+    ap.add_argument("--decode-horizon", type=int, default=8,
+                    help="fused decode horizon K (DESIGN.md §7): decode "
+                         "slots advance K tokens per jitted dispatch with "
+                         "on-device sampling and stopping; the host syncs "
+                         "once per horizon instead of once per token")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="per-sequence reference path (serve/paged.py)")
@@ -86,7 +95,8 @@ def main(argv=None) -> None:
         cache = (None if args.no_prefix_cache
                  else PrefixCache(page_size=page_size))
         sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
-                          prefix_cache=cache)
+                          prefix_cache=cache,
+                          decode_horizon=args.decode_horizon)
         for p in prompts:
             sched.add_request(p, max_new=args.max_new)
         for req in sched.run():

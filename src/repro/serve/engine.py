@@ -14,7 +14,12 @@ the data-centric rewrite (DESIGN.md §5):
     ``decode_batch(params, state, tokens, slot_mask) -> (logits, state)``
     is ONE jit-compiled dispatch with a static ``max_pages`` bucket —
     no per-token host sync, state donated across steps;
-  * chunked prefill scans whole prompt chunks inside one dispatch.
+  * the fused decode horizon (DESIGN.md §7): ``decode_many`` scans K such
+    token steps inside one dispatch — greedy sampling, token feedback and
+    per-slot stopping (steps_left / EOS) on device — so the host syncs a
+    ``[K, S]`` token block once per horizon instead of once per token;
+  * chunked prefill scans whole prompt chunks inside one dispatch, with
+    the next-token argmax inside the jit so only [S] int32 ever crosses.
 
 Attention resolves page translation on device either via the batched
 gather path (XLA, default on CPU) or the Pallas paged-attention kernel
@@ -23,15 +28,17 @@ gather path (XLA, default on CPU) or the Pallas paged-attention kernel
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from functools import partial
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from ..core.vbi.blocks import VBIAllocator
-from ..core.vbi.kvcache import (PagedServeState, init_serve_state,
-                                reserve_positions, write_token_kv)
+from ..core.vbi.kvcache import (PagedServeState, fused_decode_scan,
+                                init_serve_state, reserve_positions,
+                                write_token_kv)
 from ..core.vbi.mtl import MTL
 from ..kernels.paged_attention.kernel import paged_attn_one_seq
 from ..models.config import ModelConfig
@@ -137,7 +144,7 @@ class PagedEngine:
                  page_size: int = 16, max_seqs: int = 8,
                  max_pages_per_seq: Optional[int] = None,
                  attn_impl: str = "gather", mtl: Optional[MTL] = None,
-                 host_swap_pages: int = 0):
+                 host_swap_pages: int = 0, eos_id: int = -1):
         assert not cfg.local_global_period and not cfg.rglru_period \
             and cfg.family in ("dense", "vlm"), \
             "paged engine supports uniform GQA stacks"
@@ -148,7 +155,15 @@ class PagedEngine:
         self.n_pages = n_pages
         self.max_seqs = max_seqs
         self.max_pages = max_pages_per_seq or -(-(n_pages - 1) // max_seqs)
-        self.stats = {"decode_steps": 0, "prefill_chunks": 0}
+        self.eos_id = eos_id
+        # decode_steps counts scan steps *executed* (a lane retired early by
+        # EOS still runs masked through the rest of its horizon),
+        # decode_dispatches counts jit dispatches: with the fused horizon
+        # (DESIGN.md §7) one dispatch covers K steps, so dispatches/steps
+        # = 1/K is the tentpole's measurable contract; tokens actually
+        # produced are reconciled host-side from the returned block.
+        self.stats = {"decode_steps": 0, "decode_dispatches": 0,
+                      "prefill_chunks": 0}
         self.state = init_serve_state(
             n_layers=cfg.n_layers, n_pages=n_pages, page_size=page_size,
             n_kv=cfg.n_kv, head_dim=cfg.head_dim, max_seqs=max_seqs,
@@ -156,29 +171,31 @@ class PagedEngine:
         # the engine satisfies the allocator's pool protocol (.state + geom)
         self.alloc = VBIAllocator(self, host_swap_pages=host_swap_pages,
                                   mtl=mtl)
+        self._step = partial(_token_step, cfg, self.max_pages, attn_impl)
 
         def _decode(params, state, tokens, slot_mask):
-            return _token_step(cfg, self.max_pages, attn_impl, params,
-                               state, tokens, slot_mask)
+            return self._step(params, state, tokens, slot_mask)
 
         def _prefill(params, state, tokens, n_tokens):
             # tokens [S, C]; n_tokens [S] — valid prompt tokens this chunk.
             def tok(st, c):
                 mask = (c < n_tokens) & st.slot_active
-                logits, st = _token_step(cfg, self.max_pages, attn_impl,
-                                         params, st, tokens[:, c], mask)
+                logits, st = self._step(params, st, tokens[:, c], mask)
                 return st, logits
             state, logits_seq = lax.scan(tok, state,
                                          jnp.arange(tokens.shape[1]))
-            # last *valid* logits per slot (slots finish at different c)
+            # last *valid* logits per slot (slots finish at different c);
+            # argmax here so only [S] int32 ever needs to cross to the host
+            # — and only on chunks where some slot finished its prompt.
             last = jnp.clip(n_tokens - 1, 0)
             logits = logits_seq[last, jnp.arange(tokens.shape[0])]
-            return logits, state
+            return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), state
 
         # the tentpole contract: ONE jitted dispatch per decode step,
         # KV state donated so the pool is updated in place.
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+        self._decode_many: Dict[int, object] = {}   # horizon K -> jitted fn
 
     # -- the fast paths ------------------------------------------------------
     def decode(self, tokens: jax.Array, slot_mask: jax.Array) -> jax.Array:
@@ -187,16 +204,47 @@ class PagedEngine:
         logits, self.state = self._decode(self.params, self.state, tokens,
                                           slot_mask)
         self.stats["decode_steps"] += 1
+        self.stats["decode_dispatches"] += 1
         return logits
+
+    def _horizon_fn(self, k: int):
+        """The K-step fused horizon, compiled once per distinct K."""
+        if k not in self._decode_many:
+            def _many(params, state, tokens, slot_mask, steps_left):
+                return fused_decode_scan(
+                    partial(self._step, params), state, tokens, slot_mask,
+                    steps_left, length=k, eos_id=self.eos_id)
+            self._decode_many[k] = jax.jit(_many, donate_argnums=(1,))
+        return self._decode_many[k]
+
+    def decode_many(self, tokens: jax.Array, slot_mask: jax.Array,
+                    steps_left: jax.Array, k: int) -> jax.Array:
+        """The fused decode horizon (DESIGN.md §7): K token steps — greedy
+        sampling, token feedback, per-slot stop masking (steps_left / EOS)
+        and delayed page allocation — inside ONE donated-jit dispatch.
+
+        tokens [max_seqs] int32 (each slot's last token), slot_mask
+        [max_seqs] bool, steps_left [max_seqs] int32 → token block [k,
+        max_seqs] int32 on device (-1 on masked lanes).  The caller syncs
+        the block ONCE per horizon instead of once per token; page budget
+        for the worst-case span must be reserved through ``self.alloc``
+        before dispatch."""
+        block, self.state = self._horizon_fn(k)(
+            self.params, self.state, tokens, slot_mask, steps_left)
+        self.stats["decode_steps"] += k
+        self.stats["decode_dispatches"] += 1
+        return block
 
     def prefill_chunk(self, tokens: jax.Array, n_tokens: jax.Array
                       ) -> jax.Array:
         """tokens [max_seqs, C] int32, n_tokens [max_seqs] int32 →
-        logits [max_seqs, 1, vocab] at each slot's last fed position."""
-        logits, self.state = self._prefill(self.params, self.state, tokens,
-                                           n_tokens)
+        next greedy token per slot, [max_seqs] int32 *on device* (argmax of
+        each slot's last fed position — the caller reads it back only when
+        a slot actually finished its prompt this chunk)."""
+        nxt, self.state = self._prefill(self.params, self.state, tokens,
+                                        n_tokens)
         self.stats["prefill_chunks"] += 1
-        return logits
+        return nxt
 
     # -- introspection (syncs; never call on the decode fast path) ----------
     @property

@@ -23,7 +23,18 @@ Policies implemented:
   * **chunked prefill** — admitted prompts are fed ``prefill_chunk`` tokens
     per engine dispatch, ragged across slots; finished prompts hand their
     full pages to the prefix cache (custody moves through the allocator —
-    the mirror stays exact);
+    the mirror stays exact).  The chunk's argmax happens inside the jitted
+    dispatch, so the host reads back [S] int32 — and only on chunks where
+    some slot actually finished its prompt;
+  * **the decode horizon** (DESIGN.md §7) — decode slots advance
+    ``decode_horizon`` tokens per engine dispatch through
+    ``PagedEngine.decode_many``: sampling, token feedback and per-slot
+    stopping live on device, the host syncs ONCE per horizon.  The
+    worst-case K-token span is reserved through the allocator up front
+    (early reservation, extended from one page to the span); when the
+    mirrored budget cannot cover it the horizon is truncated before
+    anything is preempted, and commits/unreserves are reconciled from the
+    returned token block at the horizon boundary;
   * **eviction** — finished requests free their block; the device frees
     only refcount-zero pages, so cached prompt pages survive.  Cold cached
     prefixes are evicted LRU when admission or decode needs pages (before
@@ -85,22 +96,39 @@ class _SlotState:
 class Scheduler:
     def __init__(self, engine: PagedEngine, prefill_chunk: int = 8,
                  prefix_cache: Optional[PrefixCache] = None,
-                 block_props: VBProps = DEFAULT_BLOCK_PROPS):
+                 block_props: VBProps = DEFAULT_BLOCK_PROPS,
+                 decode_horizon: int = 1):
         if prefix_cache is not None:
             assert prefix_cache.page_size == engine.page_size
+        assert decode_horizon >= 1
         self.engine = engine
         self.alloc = engine.alloc          # the one memory API
         self.prefill_chunk = prefill_chunk
         self.prefix_cache = prefix_cache
         self.block_props = block_props
+        self.decode_horizon = decode_horizon
         self.queue: Deque[Request] = deque()
         self.slots: Dict[int, _SlotState] = {}
         self.finished: List[Request] = []
         self._next_rid = 0
         self._admit_seq = 0
+        # staging buffers, allocated once and reused every tick.  They MUST
+        # cross the jit boundary via jnp.array (copy=True): jnp.asarray is
+        # zero-copy on CPU when alignment permits, which would alias the
+        # dispatch's input to a buffer we refill next tick — with async
+        # dispatch and no intervening sync (a mid-prompt prefill tick) that
+        # is silent KV corruption.
+        S = engine.max_seqs
+        self._pre_toks = np.zeros((S, prefill_chunk), np.int32)
+        self._pre_counts = np.zeros((S,), np.int32)
+        self._dec_toks = np.zeros((S,), np.int32)
+        self._dec_mask = np.zeros((S,), bool)
+        self._dec_steps = np.zeros((S,), np.int32)
         self.stats = {"preemptions": 0, "steps": 0, "prefix_hits": 0,
                       "prefix_tokens_reused": 0, "cache_evicted_pages": 0,
-                      "swap_outs": 0, "swap_ins": 0, "prefill_tokens": 0}
+                      "swap_outs": 0, "swap_ins": 0, "prefill_tokens": 0,
+                      "host_syncs": 0, "prefill_host_reads": 0,
+                      "prefill_reads_skipped": 0, "horizon_truncations": 0}
 
     # -- request intake ------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int,
@@ -132,11 +160,32 @@ class Scheduler:
         return rid
 
     # -- page budgeting (delegated to the allocator's host mirror) -----------
-    def _budget_for(self, req: Request, n_shared: int = 0) -> int:
-        # current span + one decode page of headroom keeps the first decode
-        # step from underflowing the stack right after admission; pages
-        # mapped from the prefix cache are not the block's to allocate.
-        return self.alloc.pages_for(len(req.tokens)) + 1 - n_shared
+    def _budget_for(self, req: Request, n_shared: int = 0,
+                    horizon: int = 1) -> int:
+        # current span extended by the decode horizon (capped at what the
+        # request can still generate), plus one page of headroom — the
+        # paper's early reservation stretched from a 1-token to a K-token
+        # span (DESIGN.md §7), so a freshly admitted request can run its
+        # first full horizon without underflowing the stack; pages mapped
+        # from the prefix cache are not the block's to allocate.
+        # ``horizon=1`` is the minimum viable budget, used for
+        # intake/impossibility checks and as the admission fallback.
+        rem = max(1, req.max_new - len(req.out))
+        span = len(req.tokens) + min(horizon, rem) - 1
+        return self.alloc.pages_for(span) + 1 - n_shared
+
+    def _degraded_budget(self, req: Request, n_shared: int = 0) -> int:
+        """Admission budget with graceful degradation: try the full-horizon
+        span first (evicting cold cache on shortfall); if it still doesn't
+        fit, fall back to the minimum viable budget — the first horizon
+        gets truncated, which beats leaving the slot idle.  Shared by
+        fresh and swap-resume admission so the two can't drift."""
+        budget = self._budget_for(req, n_shared, self.decode_horizon)
+        if budget > self.alloc.free_pages:
+            self._evict_cache(budget - self.alloc.free_pages)
+        if budget > self.alloc.free_pages:
+            budget = self._budget_for(req, n_shared)
+        return budget
 
     # -- prefix cache custody ------------------------------------------------
     def _evict_cache(self, want_pages: int) -> int:
@@ -189,9 +238,8 @@ class Scheduler:
                 # pin before any eviction so the matched pages can't be
                 # reclaimed out from under the mapping we're about to make
                 self.prefix_cache.pin(match.all_nodes())
-            budget = self._budget_for(req, len(match.pages) if match else 0)
-            if budget > self.alloc.free_pages:
-                self._evict_cache(budget - self.alloc.free_pages)
+            budget = self._degraded_budget(
+                req, len(match.pages) if match else 0)
             if budget > self.alloc.free_pages and match is not None \
                     and match.partial_node is not None:
                 # the pinned COW source may itself be the page we need
@@ -229,11 +277,10 @@ class Scheduler:
             self.slots[slot] = st
 
     def _admit_swapped(self, req: Request, free_slots: List[int]) -> bool:
-        """Re-admit a host-swapped request: budget its full span, then
-        restore its exact KV with one device scatter (no re-prefill)."""
-        budget = self._budget_for(req)
-        if budget > self.alloc.free_pages:
-            self._evict_cache(budget - self.alloc.free_pages)
+        """Re-admit a host-swapped request: budget its full span (plus the
+        decode-horizon headroom if it fits), then restore its exact KV with
+        one device scatter (no re-prefill)."""
+        budget = self._degraded_budget(req)
         if budget > self.alloc.free_pages:
             return False
         self.queue.popleft()
@@ -282,53 +329,100 @@ class Scheduler:
         self.stats["preemptions"] += 1
         return True
 
-    def _ensure_decode_budget(self, dec_slots: List[int]) -> None:
-        """Evict cold cached prefixes, then preempt, until the mirrored
-        budget covers every decode slot whose next token opens a fresh page
-        beyond its reservation."""
-        def pending_allocs() -> int:
-            return sum(
-                1 for s in dec_slots if s in self.slots and
-                self.alloc.pages_for(self.slots[s].fed + 1)
-                - self.slots[s].block.shared_pages
-                > self.slots[s].block.reserved_pages)
-        while self.slots and pending_allocs() > self.alloc.free_pages:
-            if self._evict_cache(pending_allocs() - self.alloc.free_pages):
+    def _plan_horizon(self, dec_slots: List[int]
+                      ) -> "tuple[int, Dict[int, int]]":
+        """Pick the horizon K for this tick and span-reserve it.
+
+        Starts from ``decode_horizon`` and shrinks only under pressure, in
+        strictly escalating order: evict cold cached prefixes, then
+        truncate the horizon (running fewer fused steps is cheaper than
+        destroying any resident KV), then preempt.  Returns ``(K, wants)``
+        where ``wants[slot]`` is the per-slot step budget whose worst-case
+        span was reserved through the allocator — the caller MUST pass
+        exactly these as the device ``steps_left`` so the fused scan can
+        never underflow the device free stack (DESIGN.md §7)."""
+        def want(s: int, k: int) -> int:
+            st = self.slots[s]
+            return min(k, st.req.max_new - len(st.req.out))
+
+        def deficit(k: int) -> int:
+            need = 0
+            for s in dec_slots:
+                if s not in self.slots:
+                    continue
+                st = self.slots[s]
+                need += max(0, self.alloc.pages_for(st.fed + want(s, k))
+                            - st.block.shared_pages
+                            - st.block.reserved_pages)
+            return need - self.alloc.free_pages
+
+        k = self.decode_horizon
+        # near the tail of generation no slot may want the full horizon:
+        # shrink K along the halving ladder (bounded set of compiled scan
+        # lengths) so fully-masked scan steps don't burn model compute
+        want_max = max(want(s, k) for s in dec_slots)
+        while k > 1 and k // 2 >= want_max:
+            k //= 2
+        while (short := deficit(k)) > 0:
+            if self._evict_cache(short):
+                continue
+            if k > 1:
+                k = max(1, k // 2)
+                self.stats["horizon_truncations"] += 1
                 continue
             if not self._preempt_one():
                 # every resident block is PINNED: decoding on would
                 # oversubscribe the pool — fail loudly, not via a reserve
                 # assertion (or silent free-stack underflow under -O)
                 raise RuntimeError(
-                    f"decode needs {pending_allocs()} new pages, pool has "
-                    f"{self.alloc.free_pages} free, and every resident "
-                    f"block is PINNED — nothing can be preempted")
+                    f"decode needs {short + self.alloc.free_pages} new "
+                    f"pages, pool has {self.alloc.free_pages} free, and "
+                    f"every resident block is PINNED — nothing can be "
+                    f"preempted")
+        wants = {}
+        for s in dec_slots:
+            if s in self.slots:
+                st = self.slots[s]
+                wants[s] = want(s, k)
+                self.alloc.reserve_span(st.block, st.fed, wants[s])
+        return k, wants
 
     # -- one scheduler tick ---------------------------------------------------
     def step(self) -> List[Request]:
-        """Admit, prefill one chunk, decode one token; returns requests that
+        """Admit, prefill one chunk, decode one horizon (``decode_horizon``
+        tokens per decoding slot, one host sync); returns requests that
         finished this tick."""
         self.stats["steps"] += 1
         self._admit()
         done_before = len(self.finished)
-        S = self.engine.max_seqs
 
         # 1. chunked prefill for slots still consuming their prompt
         pre = {s: st for s, st in self.slots.items() if st.prefilling}
         if pre:
             C = self.prefill_chunk
-            toks = np.zeros((S, C), np.int32)
-            counts = np.zeros((S,), np.int32)
+            toks, counts = self._pre_toks, self._pre_counts
+            toks.fill(0)
+            counts.fill(0)
             for s, st in pre.items():
                 seq = st.req.tokens
                 n = min(C, st.prefill_len - st.fed)
                 self.alloc.reserve(st.block, st.fed + n)
                 toks[s, :n] = seq[st.fed:st.fed + n]
                 counts[s] = n
-            logits = self.engine.prefill_chunk(jnp.asarray(toks),
-                                               jnp.asarray(counts))
+            nxt_dev = self.engine.prefill_chunk(jnp.array(toks),
+                                                jnp.array(counts))
             self.stats["prefill_tokens"] += int(counts.sum())
-            nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+            # argmax happened inside the dispatch; read the [S] int32 back
+            # only if some slot finished its prompt this chunk
+            finishing = [s for s, st in pre.items()
+                         if st.fed + counts[s] >= st.prefill_len]
+            nxt = None
+            if finishing:
+                nxt = np.asarray(nxt_dev)
+                self.stats["host_syncs"] += 1
+                self.stats["prefill_host_reads"] += 1
+            else:
+                self.stats["prefill_reads_skipped"] += 1
             for s, st in pre.items():
                 st.fed += int(counts[s])
                 self.alloc.commit(st.block, st.fed)
@@ -338,31 +432,44 @@ class Scheduler:
                         st.inserted = True
                     st.req.out.append(int(nxt[s]))
 
-        # 2. one decode step for slots past their prompt
+        # 2. one fused decode horizon for slots past their prompt
         dec_ids = [s for s, st in self.slots.items()
                    if not st.prefilling and s not in pre]
+        k, wants = 1, {}
         if dec_ids:
-            self._ensure_decode_budget(dec_ids)
+            k, wants = self._plan_horizon(dec_ids)
             dec_ids = [s for s in dec_ids if s in self.slots]
         if dec_ids:
-            toks = np.zeros((S,), np.int32)
-            mask = np.zeros((S,), bool)
+            toks, mask = self._dec_toks, self._dec_mask
+            steps = self._dec_steps
+            toks.fill(0)
+            mask.fill(False)
+            steps.fill(0)
             for s in dec_ids:
                 st = self.slots[s]
                 toks[s] = st.req.tokens[-1]
                 mask[s] = True
-                self.alloc.reserve(st.block, st.fed + 1)
-            logits = self.engine.decode(jnp.asarray(toks), jnp.asarray(mask))
-            nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+                steps[s] = wants[s]     # exactly the span reserved above
+            block = self.engine.decode_many(
+                jnp.array(toks), jnp.array(mask), jnp.array(steps), k)
+            # THE one host sync of the horizon: a [K, S] int32 token block
+            block = np.asarray(block)
+            self.stats["host_syncs"] += 1
             for s in dec_ids:
                 st = self.slots[s]
-                st.fed += 1
+                col = block[:, s]
+                produced = col[col >= 0]          # -1 = masked lane
+                st.fed += len(produced)
                 self.alloc.commit(st.block, st.fed)
-                st.req.out.append(int(nxt[s]))
+                if len(produced) < steps[s]:      # stopped on device (EOS):
+                    self.alloc.unreserve(st.block, st.fed)   # return surplus
+                st.req.out.extend(int(t) for t in produced)
 
-        # 3. eviction
+        # 3. eviction (max_new reached, or the device emitted EOS)
+        eos = self.engine.eos_id
         for s in [s for s, st in self.slots.items()
-                  if len(st.req.out) >= st.req.max_new]:
+                  if len(st.req.out) >= st.req.max_new
+                  or (eos >= 0 and st.req.out and st.req.out[-1] == eos)]:
             self._evict(s)
         return self.finished[done_before:]
 

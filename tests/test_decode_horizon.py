@@ -1,0 +1,197 @@
+"""The fused decode horizon (DESIGN.md §7):
+
+  * multi-step ≡ single-step token-exactness: K ∈ {1, 4, 8} produce
+    bit-identical outputs, including across preemption (discard,
+    prefix-cache-restore, and host-swap-resume placements);
+  * a *full horizon* performs zero host transfers
+    (``jax.transfer_guard("disallow")``) and donates the KV state — the
+    host syncs once per horizon, at the boundary;
+  * ``engine.stats`` shows dispatches-per-token ≈ 1/K;
+  * the in-scan stop masking (steps_left budget + EOS) is exact, checked
+    against a deterministic stub model and end-to-end through the
+    scheduler's unreserve reconciliation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vbi.kvcache import fused_decode_scan
+from repro.launch.serve import serve_config
+from repro.models.model import init_params
+from repro.serve.engine import PagedEngine
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _run(eng, prompts, max_new, K, cache=False, prefill_chunk=4):
+    sched = Scheduler(eng, prefill_chunk=prefill_chunk,
+                      prefix_cache=(PrefixCache(page_size=eng.page_size)
+                                    if cache else None),
+                      decode_horizon=K)
+    for p in prompts:
+        sched.add_request(p, max_new=max_new)
+    fin = sched.run()
+    if cache:                       # drain so the engine is clean for reuse
+        eng.alloc.release(sched.prefix_cache.evict(sched.prefix_cache.n_pages))
+    return {r.rid: r.out for r in fin}, sched
+
+
+def test_horizon_token_exactness(setup):
+    """K ∈ {1, 4, 8} produce bit-identical greedy outputs on a roomy pool,
+    and the pool drains back to full after every run."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 5).tolist() for _ in range(4)]
+    eng = PagedEngine(cfg, params, n_pages=65, page_size=4, max_seqs=2,
+                      max_pages_per_seq=16)
+    outs = {}
+    for K in (1, 4, 8):
+        outs[K], sched = _run(eng, prompts, max_new=9, K=K)
+        assert eng.alloc.free_pages == eng.free_pages == 64
+        assert all(len(o) == 9 for o in outs[K].values())
+    assert outs[1] == outs[4] == outs[8]
+
+
+def test_horizon_exactness_across_preemption_paths(setup):
+    """Preemption at horizon boundaries keeps greedy decode bit-identical
+    for every victim placement: discard + re-prefill, prefix-cache restore,
+    and host-swap resume — at K ∈ {1, 4, 8} each."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 2).tolist() for _ in range(3)]
+
+    roomy_eng = PagedEngine(cfg, params, n_pages=33, page_size=2,
+                            max_seqs=2, max_pages_per_seq=8)
+    roomy, _ = _run(roomy_eng, prompts, max_new=8, K=1)
+
+    # tight pool: concurrent decodes oversubscribe it mid-stream
+    variants = {"discard": dict(), "cache-restore": dict(cache=True),
+                "swap-resume": dict(swap=24)}
+    for name, opt in variants.items():
+        eng = PagedEngine(cfg, params, n_pages=9, page_size=2, max_seqs=2,
+                          max_pages_per_seq=8,
+                          host_swap_pages=opt.get("swap", 0))
+        for K in (1, 4, 8):
+            out, sched = _run(eng, prompts, max_new=8, K=K,
+                              cache=opt.get("cache", False))
+            assert out == roomy, f"{name} K={K} diverged"
+            assert sched.stats["preemptions"] >= 1, f"{name} K={K}"
+            if name == "swap-resume":
+                assert sched.stats["swap_ins"] >= 1
+            assert eng.alloc.free_pages == eng.free_pages == 8
+
+
+def test_full_horizon_no_host_transfers(setup):
+    """The tentpole contract: one fused 8-step horizon triggers ZERO host
+    transfers (sampling, feedback, stopping, page allocation all live on
+    device); the single sync happens at the boundary, and the state is
+    donated through the scan."""
+    cfg, params = setup
+    eng = PagedEngine(cfg, params, n_pages=32, page_size=4, max_seqs=2,
+                      max_pages_per_seq=8)
+    eng.alloc.alloc(0)
+    eng.alloc.alloc(1)
+    toks = jax.device_put(jnp.asarray([1, 2], jnp.int32))
+    mask = jax.device_put(jnp.ones((2,), bool))
+    steps = jax.device_put(jnp.full((2,), 8, jnp.int32))
+    eng.decode_many(toks, mask, steps, k=8)          # compile/warmup
+    prev_state = eng.state
+    with jax.transfer_guard("disallow"):
+        block = eng.decode_many(toks, mask, steps, k=8)
+        jax.block_until_ready(block)
+    assert prev_state.k_pages.is_deleted()           # donated
+    got = np.asarray(block)                          # THE one sync
+    assert got.shape == (8, 2) and (got >= 0).all()
+    np.testing.assert_array_equal(np.asarray(eng.state.seq_lens), [16, 16])
+
+
+def test_dispatches_per_token_scale_inversely_with_horizon(setup):
+    """engine.stats: one jitted dispatch per K decoded tokens, one host
+    sync per horizon (+ one per prompt-finishing prefill chunk)."""
+    cfg, params = setup
+    eng = PagedEngine(cfg, params, n_pages=33, page_size=4, max_seqs=1,
+                      max_pages_per_seq=8)
+    rng = np.random.default_rng(1)
+    prompt = [rng.integers(0, cfg.vocab, 4).tolist()]
+    for K in (1, 4):
+        d0, s0 = eng.stats["decode_dispatches"], eng.stats["decode_steps"]
+        out, sched = _run(eng, prompt, max_new=13, K=K)
+        decode_tokens = 13 - 1            # first token comes from prefill
+        dispatches = eng.stats["decode_dispatches"] - d0
+        assert dispatches == decode_tokens // K
+        assert (eng.stats["decode_steps"] - s0) == decode_tokens
+        # one decode-block sync per horizon, one prefill read (the only
+        # chunk finishes the prompt)
+        assert sched.stats["host_syncs"] == decode_tokens // K + 1
+        assert sched.stats["prefill_host_reads"] == 1
+
+
+def test_fused_scan_stop_masking_unit():
+    """In-scan stop masking against a stub step: emitted tokens follow the
+    on-device feedback (t -> t+1), a slot retires when its steps_left
+    budget is spent OR it emits EOS, retired lanes emit -1 and write
+    nothing (state untouched)."""
+    V, S, eos = 8, 3, 5
+
+    def stub_step(state, toks, active):
+        # state counts writes per slot, exactly like seq_lens would
+        logits = jax.nn.one_hot(jnp.clip(toks + 1, 0, V - 1), V)[:, None, :]
+        return logits, state + active.astype(jnp.int32)
+
+    tokens = jnp.asarray([2, 0, 7], jnp.int32)
+    slot_mask = jnp.asarray([True, True, False])
+    steps_left = jnp.asarray([6, 2, 6], jnp.int32)
+    block, state = fused_decode_scan(
+        stub_step, jnp.zeros((S,), jnp.int32), tokens, slot_mask,
+        steps_left, length=6, eos_id=eos)
+    block = np.asarray(block)
+    # slot 0: 3 -> 4 -> 5(EOS) then retired; slot 1: budget of 2; slot 2:
+    # masked out entirely
+    np.testing.assert_array_equal(block[:, 0], [3, 4, 5, -1, -1, -1])
+    np.testing.assert_array_equal(block[:, 1], [1, 2, -1, -1, -1, -1])
+    np.testing.assert_array_equal(block[:, 2], [-1] * 6)
+    np.testing.assert_array_equal(np.asarray(state), [3, 2, 0])
+    # eos_id=-1 disables EOS stopping: slot 0 runs its full budget
+    block2, _ = fused_decode_scan(
+        stub_step, jnp.zeros((S,), jnp.int32), tokens, slot_mask,
+        steps_left, length=6, eos_id=-1)
+    np.testing.assert_array_equal(np.asarray(block2)[:, 0],
+                                  [3, 4, 5, 6, 7, 7])
+
+
+def test_eos_stops_request_and_returns_surplus_reservation(setup):
+    """End-to-end EOS: pick a token the model actually emits, re-run with
+    it as eos_id — the output is the prefix through the first occurrence,
+    the surplus span reservation is unreserved at the boundary, and the
+    pool drains back to full."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 4).tolist()]
+
+    eng = PagedEngine(cfg, params, n_pages=33, page_size=4, max_seqs=1,
+                      max_pages_per_seq=8)
+    free, sched = _run(eng, prompts, max_new=12, K=4)
+    ref = free[0]
+    # an EOS that is first *decoded* (not the prefill token, index >= 1)
+    # and lands mid-horizon, so the fused scan stops early on device and
+    # the scheduler must return the surplus span reservation
+    i = next(j for j in range(1, len(ref)) if ref[j] not in ref[:j])
+    eos, cut = ref[i], i + 1
+    assert cut < 12
+
+    eng2 = PagedEngine(cfg, params, n_pages=33, page_size=4, max_seqs=1,
+                       max_pages_per_seq=8, eos_id=eos)
+    out, sched2 = _run(eng2, prompts, max_new=12, K=4)
+    assert out[0] == ref[:cut]
+    # the early stop left a real page surplus behind and unreserve
+    # reclaimed it at the horizon boundary (not just free() at eviction)
+    assert eng2.alloc.stats["unreserved_pages"] > 0
+    assert eng2.alloc.free_pages == eng2.free_pages == 32

@@ -108,9 +108,9 @@ def test_refcount_conservation_random_traces():
             swapped = [b for b in blocks if b.status == "swapped"]
             free_slots = [s for s in range(max_seqs)
                           if s not in al.blocks]
-            op = rng.choice(["alloc", "feed", "cache_insert", "map_shared",
-                             "cow", "release_cache", "swap_out", "swap_in",
-                             "free", "double_free"])
+            op = rng.choice(["alloc", "feed", "horizon_feed", "cache_insert",
+                             "map_shared", "cow", "release_cache",
+                             "swap_out", "swap_in", "free", "double_free"])
             if op == "alloc" and free_slots:
                 blocks.append(al.alloc(int(rng.choice(free_slots))))
             elif op == "feed" and resident:
@@ -121,6 +121,26 @@ def test_refcount_conservation_random_traces():
                         - blk.reserved_pages)
                 if n > 0 and need <= al.free_pages:
                     _feed(pool, al, blk, n)
+            elif op == "horizon_feed" and resident:
+                # the fused-horizon protocol (DESIGN.md §7): span-reserve K
+                # tokens up front, advance j ≤ K (device-side early stop),
+                # reconcile at the boundary with commit + unreserve
+                blk = resident[rng.integers(len(resident))]
+                k = min(int(rng.integers(1, ps * 2 + 1)),
+                        rowP * ps - blk.n_tokens)
+                need = (al.pages_for(blk.n_tokens + k) - blk.shared_pages
+                        - blk.reserved_pages)
+                if k > 0 and need <= al.free_pages:
+                    n0 = blk.n_tokens
+                    al.reserve_span(blk, n0, k)
+                    j = int(rng.integers(0, k + 1))
+                    for _ in range(j):
+                        mask = np.zeros((pool.max_seqs,), bool)
+                        mask[blk.slot] = True
+                        pool.state, _ = reserve_positions(pool.state,
+                                                          jnp.asarray(mask))
+                    al.commit(blk, n0 + j)
+                    al.unreserve(blk, n0 + j)
             elif op == "cache_insert" and resident:
                 # scheduler protocol: move owned full pages to the ledger
                 blk = resident[rng.integers(len(resident))]
@@ -330,13 +350,19 @@ def test_all_pinned_pool_exhaustion_fails_loudly():
 def test_raw_page_ops_gated_to_core_vbi():
     """The ``make check-vbi-api`` contract, enforced in-suite: no module
     outside core/vbi/ calls the raw page ops directly — the VBIAllocator
-    is the only door."""
+    is the only door.  The jitted fast-path ops (``reserve_positions``,
+    ``write_token_kv``, ``fused_decode_scan``) are additionally gated to
+    ``serve/engine.py``: scheduler, benchmarks and everything else must go
+    through the engine + allocator, so horizon code cannot grow a side
+    channel around the reservation protocol."""
     root = pathlib.Path(__file__).resolve().parent.parent
-    # every raw PagedServeState lifecycle op (reserve_positions and
-    # write_token_kv are the jitted fast path, owned by the engine)
+    # every raw PagedServeState lifecycle op
     pat = re.compile(
         r"\b(admit_slot|release_slot|map_prefix|clone_page_cow"
         r"|retain_pages|release_pages|snapshot_block|restore_block)\s*\(")
+    # the jitted fast path: owned by the engine, and ONLY the engine
+    fast_pat = re.compile(
+        r"\b(reserve_positions|write_token_kv|fused_decode_scan)\b")
     bad = []
     for base in ("src/repro", "benchmarks"):
         for p in sorted((root / base).rglob("*.py")):
@@ -344,6 +370,8 @@ def test_raw_page_ops_gated_to_core_vbi():
             if rel.startswith("src/repro/core/vbi/"):
                 continue
             for i, line in enumerate(p.read_text().splitlines(), 1):
-                if pat.search(line):
+                if pat.search(line) or (
+                        fast_pat.search(line)
+                        and rel != "src/repro/serve/engine.py"):
                     bad.append(f"{rel}:{i}: {line.strip()}")
     assert not bad, "raw page ops outside core/vbi/:\n" + "\n".join(bad)
