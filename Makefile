@@ -16,7 +16,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test check-vbi-api bench-serve bench-serve-prefix bench-serve-swap \
-	bench-serve-horizon bench serve-demo
+	bench-serve-horizon bench-serve-window bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -41,6 +41,10 @@ bench-serve-swap:
 
 bench-serve-horizon:
 	$(PYTHON) -m benchmarks.bench_lm_serving --smoke --workload decode-heavy
+
+bench-serve-window:
+	$(PYTHON) -m benchmarks.bench_lm_serving --smoke \
+	    --workload long-decode-window
 
 bench:
 	$(PYTHON) -m benchmarks.run

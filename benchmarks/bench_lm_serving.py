@@ -330,6 +330,103 @@ def bench_decode_heavy(n_requests: int = 8, prompt_len: int = 4,
     return lines, metrics
 
 
+def bench_long_decode_window(n_requests: int = 4, prompt_len: int = 8,
+                             max_new: int = 96, n_slots: int = 2,
+                             horizon: int = 8) -> "tuple[list[str], dict]":
+    """Property-typed KV blocks on a long-decode workload (DESIGN.md §8):
+    a gemma3-style local/global stack and a recurrentgemma-style rglru
+    hybrid, each served heterogeneously (windowed layers on capped ring
+    frames, recurrent layers on constant-size state) vs the SAME stack
+    served all-full-attention.  Records tokens/s and KV footprint per
+    request — ``kv_page_slots`` counts layer×page units (a full-pool page
+    spans every full layer, a ring frame exactly one windowed layer), so
+    the two shapes are comparable; ``kv_bytes`` is the same in bytes.
+    Windowed layers stop consuming memory once the window saturates, so
+    the hetero footprint flattens while the baseline keeps growing."""
+    import dataclasses
+
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.scheduler import Scheduler
+
+    page_size = 8
+    T = prompt_len + max_new
+    span_pages = -(-T // page_size)
+    per_slot = span_pages + 1
+    n_pages = 1 + n_slots * per_slot
+    rng = np.random.default_rng(0)
+
+    def once(eng, sample=False):
+        sched = Scheduler(eng, prefill_chunk=page_size,
+                          decode_horizon=horizon)
+        for p in prompts:
+            sched.add_request(p, max_new=max_new)
+        if sample:                   # untimed run: verify the footprint
+            peak = 0
+            while sched.queue or sched.slots:
+                sched.step()
+                peak = max(peak, eng.pages_in_use)
+            return peak
+        t0 = time.perf_counter()
+        sched.run()
+        return time.perf_counter() - t0
+
+    results = {}
+    for key, arch in (("local_global", "gemma3-12b"),
+                      ("rglru_hybrid", "recurrentgemma-9b")):
+        cfg = serve_config(arch)
+        base = dataclasses.replace(cfg, local_global_period=0,
+                                   rglru_period=0, window=0,
+                                   name=cfg.name + "-all-full")
+        prompts = [rng.integers(0, cfg.vocab, prompt_len).tolist()
+                   for _ in range(n_requests)]
+        runs = {}
+        for tag, c in (("hetero", cfg), ("baseline", base)):
+            params = init_params(c, jax.random.key(0))
+            eng = PagedEngine(c, params, n_pages=n_pages,
+                              page_size=page_size, max_seqs=n_slots,
+                              max_pages_per_seq=per_slot)
+            once(eng)                             # compile/warmup
+            dt = once(eng)
+            peak = once(eng, sample=True)
+            g = eng.geom
+            pool_pages = span_pages if g.has_full else 0
+            layer_pages = (pool_pages * g.n_full
+                           + g.ring_pages * g.n_ring)
+            kv_bytes = (layer_pages * page_size * c.n_kv * c.head_dim
+                        * 2 * 4)                  # k+v, float32
+            runs[tag] = {
+                "tok_s": n_requests * (T - 1) / dt,
+                "pool_pages_per_req": pool_pages,
+                "kv_page_slots_per_req": layer_pages,
+                "kv_bytes_per_req": kv_bytes,
+                "peak_pool_pages_in_use": peak,
+                "layer_kinds": {"full": g.n_full, "ring": g.n_ring,
+                                "rglru": g.n_rg, "ssm": g.n_ssm},
+            }
+        h, b = runs["hetero"], runs["baseline"]
+        results[key] = {
+            "arch": cfg.name, "n_requests": n_requests,
+            "prompt_len": prompt_len, "max_new": max_new,
+            "decode_horizon": horizon, "page_size": page_size,
+            "hetero": h, "baseline": b,
+            "pages_ratio": (b["kv_page_slots_per_req"]
+                            / max(h["kv_page_slots_per_req"], 1)),
+            "tok_s_ratio": h["tok_s"] / b["tok_s"],
+        }
+    lines = [emit(
+        f"lm_serving/long_decode_window_{key}", 0.0,
+        f"hetero={m['hetero']['tok_s']:.1f}tok/s "
+        f"baseline={m['baseline']['tok_s']:.1f}tok/s "
+        f"(x{m['tok_s_ratio']:.2f}) kv_slots="
+        f"{m['hetero']['kv_page_slots_per_req']}vs"
+        f"{m['baseline']['kv_page_slots_per_req']} "
+        f"({m['pages_ratio']:.1f}x fewer)")
+        for key, m in results.items()]
+    return lines, results
+
+
 def write_bench_json(results: dict) -> None:
     # merge into the existing file: a single-workload run must not wipe
     # the other sections tracked PR over PR
@@ -379,11 +476,13 @@ def run() -> list[str]:
     pre_lines, pre_metrics = bench_shared_prefix()
     swp_lines, swp_metrics = bench_swap_pressure()
     hor_lines, hor_metrics = bench_decode_heavy()
-    lines += eng_lines + pre_lines + swp_lines + hor_lines
+    win_lines, win_metrics = bench_long_decode_window()
+    lines += eng_lines + pre_lines + swp_lines + hor_lines + win_lines
     write_bench_json({"engine_vs_legacy": eng_metrics,
                       "shared_prefix": pre_metrics,
                       "swap_pressure": swp_metrics,
-                      "decode_heavy": hor_metrics})
+                      "decode_heavy": hor_metrics,
+                      "long_decode_window": win_metrics})
     return lines
 
 
@@ -393,7 +492,7 @@ if __name__ == "__main__":
                     help="serving comparisons only (CI fast path)")
     ap.add_argument("--workload", default="all",
                     choices=("engine", "shared-prefix", "swap-pressure",
-                             "decode-heavy", "all"),
+                             "decode-heavy", "long-decode-window", "all"),
                     help="which serving workload(s) to run under --smoke")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--shared-len", type=int, default=256)
@@ -415,6 +514,9 @@ if __name__ == "__main__":
             _, results["decode_heavy"] = bench_decode_heavy(
                 n_requests=(8 if args.requests == 32 else args.requests),
                 max_new=args.max_new)
+        if args.workload in ("long-decode-window", "all"):
+            _, results["long_decode_window"] = bench_long_decode_window(
+                n_requests=(4 if args.requests == 32 else args.requests))
         write_bench_json(results)
     else:
         run()

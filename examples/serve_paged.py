@@ -1,14 +1,27 @@
 """VBI-paged serving demo: jitted continuous-batching decode with device-side
 delayed page allocation — the MTL managing the KV address space (DESIGN.md
-§2, engine architecture in §5) — and cross-request KV prefix sharing
-(serve/prefix_cache.py, §5.1).
+§2, engine architecture in §5) — cross-request KV prefix sharing
+(serve/prefix_cache.py, §5.1), and property-typed cache blocks for
+heterogeneous layer stacks (§8).
 
     PYTHONPATH=src python examples/serve_paged.py --requests 6 --max-new 16
     PYTHONPATH=src python examples/serve_paged.py --requests 8 \\
         --shared-prefix 32 --max-new 8      # shared system prompt -> cache hits
 
-Pass ``--no-prefix-cache`` to disable sharing, ``--legacy`` for the
-per-sequence reference path (serve/paged.py).
+A NON-uniform stack through the same engine — gemma3's 5-local:1-global
+pattern (windowed layers on capped RING frames, global layers paged) and
+recurrentgemma's RG-LRU hybrid (constant-size RECURRENT state, zero page
+budget), fused decode horizon on:
+
+    PYTHONPATH=src python examples/serve_paged.py --arch gemma3-12b \\
+        --requests 6 --max-new 24 --decode-horizon 8
+    PYTHONPATH=src python examples/serve_paged.py --arch recurrentgemma-9b \\
+        --requests 6 --max-new 24 --decode-horizon 8
+
+Pass ``--no-prefix-cache`` to disable sharing (auto-disabled for
+RING/RECURRENT stacks), ``--attn-impl kernel`` for the Pallas
+paged-attention path, ``--legacy`` for the per-sequence reference path
+(serve/paged.py, uniform stacks only).
 """
 import sys
 

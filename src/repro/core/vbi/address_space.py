@@ -86,6 +86,16 @@ class VBProps(enum.IntFlag):
     SWAPPABLE = 1 << 13         # preemption may demote to the host tier
     SHARED_RO = 1 << 14         # maps pages it does not own, read-only
     COW = 1 << 15               # holds a copy-on-write clone
+    # data-property-typed cache blocks (DESIGN.md §8): per-layer-kind KV
+    # state whose declared liveness/size properties the allocator exploits
+    RING = 1 << 16              # bounded liveness: only the last `window`
+    #                             tokens are ever read — footprint capped at
+    #                             ceil(window/page_size) pages, frames
+    #                             reused in place, ineligible for prefix
+    #                             sharing (old tokens die, pages never grow)
+    RECURRENT = 1 << 17         # constant size: per-slot recurrent state
+    #                             (RG-LRU h / SSM state), snapshot/restore
+    #                             is a dense copy, zero per-token growth
 
 
 @dataclasses.dataclass

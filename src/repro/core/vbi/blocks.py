@@ -40,9 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .address_space import VBProps
-from .kvcache import (PagedKVManager, admit_slot, clone_page_cow,
-                      init_serve_state, map_prefix, release_pages,
-                      release_slot, restore_block, retain_pages,
+from .kvcache import (PagedKVManager, admit_slot, aux_swap_charge,
+                      clone_page_cow, init_serve_state, make_ring_table,
+                      map_prefix, release_pages, release_slot, restore_aux,
+                      restore_block, retain_pages, snapshot_aux,
                       snapshot_block)
 from .mtl import MTL, PhysicalMemory
 
@@ -86,28 +87,53 @@ class PagePool:
     """Minimal device page-pool holder: the state + geometry an allocator
     needs.  :class:`~repro.serve.engine.PagedEngine` satisfies the same
     protocol (``state``, ``n_pages``, ``page_size``, ``max_seqs``,
-    ``max_pages``); this class exists so the allocator can be used — and
-    tested — without a model."""
+    ``max_pages``, plus the property-typed extension: ``has_full``,
+    ``kind_props``, ``aux_swap_pages``, ``ring_row``); this class exists
+    so the allocator can be used — and tested — without a model.  The
+    hetero kwargs mirror DESIGN.md §8: ``ring_layers``/``ring_pages`` add
+    a RING pool (static per-slot frames), ``rg_layers``/``rnn_width`` a
+    RECURRENT RG-LRU state."""
 
     def __init__(self, n_layers: int, n_pages: int, page_size: int,
                  n_kv: int, head_dim: int, max_seqs: int,
-                 max_pages_per_seq: int, dtype=jnp.float32):
+                 max_pages_per_seq: int, dtype=jnp.float32,
+                 ring_layers: int = 0, ring_pages: int = 0,
+                 rg_layers: int = 0, rnn_width: int = 0):
         self.n_pages = n_pages
         self.page_size = page_size
         self.max_seqs = max_seqs
         self.max_pages = max_pages_per_seq
+        self.has_full = n_layers > 0
+        self.kind_props = VBProps.NONE
+        if ring_layers:
+            self.kind_props |= VBProps.RING
+        if rg_layers:
+            self.kind_props |= VBProps.RECURRENT
+        self.aux_swap_pages = aux_swap_charge(ring_layers, ring_pages,
+                                              rg_layers)
+        self.ring_table_np = make_ring_table(
+            max_seqs, ring_pages if ring_layers else 0)
         self.state = init_serve_state(
             n_layers=n_layers, n_pages=n_pages, page_size=page_size,
             n_kv=n_kv, head_dim=head_dim, max_seqs=max_seqs,
-            max_pages_per_seq=max_pages_per_seq, dtype=dtype)
+            max_pages_per_seq=max_pages_per_seq, dtype=dtype,
+            n_ring_layers=ring_layers, ring_pages=ring_pages,
+            n_rg=rg_layers, rnn_width=rnn_width)
+
+    def ring_row(self, slot: int) -> jax.Array:
+        return jnp.asarray(self.ring_table_np[slot])
 
 
 @dataclasses.dataclass
 class _SwapImage:
     k: np.ndarray                       # [n_layers, n_pages, ps, n_kv, hd]
     v: np.ndarray
-    n_pages: int
+    n_pages: int                        # full-pool pages to pop on restore
     n_tokens: int
+    charge: int                         # host-tier pages incl. the aux state
+    # property-typed aux state (DESIGN.md §8): RING frames (dense gather of
+    # the capped window) + RECURRENT state rows; None for uniform stacks
+    aux: Optional[tuple] = None
 
 
 class HostSwapTier:
@@ -125,13 +151,13 @@ class HostSwapTier:
         return self.used_pages + n_pages <= self.capacity_pages
 
     def put(self, bid: int, img: _SwapImage) -> None:
-        assert bid not in self.images and self.can_hold(img.n_pages)
+        assert bid not in self.images and self.can_hold(img.charge)
         self.images[bid] = img
-        self.used_pages += img.n_pages
+        self.used_pages += img.charge
 
     def pop(self, bid: int) -> _SwapImage:
         img = self.images.pop(bid)
-        self.used_pages -= img.n_pages
+        self.used_pages -= img.charge
         return img
 
 
@@ -163,6 +189,13 @@ class VBIAllocator:
 
     # -- geometry / budget ---------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
+        """Pool pages a span of ``n_tokens`` consumes — per-kind-aware
+        (DESIGN.md §8): only FULL-attention layers are backed by the paged
+        pool, so a stack with none (all RING/RECURRENT — mixtral SWA,
+        recurrentgemma, mamba2) has an identically-zero page budget: its
+        footprint is the static ring frames + constant recurrent state."""
+        if not getattr(self.pool, "has_full", True):
+            return 0
         return -(-n_tokens // self.pool.page_size)
 
     @property
@@ -188,6 +221,10 @@ class VBIAllocator:
         arrive on first dirty writeback (device ``reserve_positions``) or
         via ``map_shared``/``swap_in``."""
         assert slot not in self.blocks, "slot busy"
+        # the pool's layer kinds stamp their data properties on the block:
+        # RING (bounded liveness) / RECURRENT (constant size) — placement
+        # and sharing decisions read these, not the model config
+        props |= getattr(self.pool, "kind_props", VBProps.NONE)
         blk = VirtualBlock(self._next_bid, slot, props)
         self._next_bid += 1
         blk.vbid = self.mtl.enable_vb(0, props)
@@ -268,6 +305,10 @@ class VBIAllocator:
         """Map already-filled cached pages read-only into the block (one
         device scatter, zero prefill FLOPs); each page gains a reference."""
         assert block.status == "resident"
+        assert not block.props & (VBProps.RING | VBProps.RECURRENT), \
+            "RING/RECURRENT blocks are ineligible for prefix sharing: " \
+            "ring frames are position-recycled and recurrent state is " \
+            "not page-addressed"
         self.pool.state = map_prefix(
             self.pool.state, jnp.int32(block.slot), self._padded_ids(page_ids),
             jnp.int32(len(page_ids)), jnp.int32(n_tokens))
@@ -333,13 +374,21 @@ class VBIAllocator:
                 or block.status != "resident" or block.n_tokens == 0):
             return False
         n_pages = self.pages_for(block.n_tokens)
-        if not self.swap.can_hold(n_pages):
+        charge = n_pages + getattr(self.pool, "aux_swap_pages", 0)
+        if not self.swap.can_hold(charge):
             self.stats["swap_rejects"] += 1
             return False
         k, v = snapshot_block(self.pool.state, jnp.int32(block.slot))
+        aux = None
+        if block.props & (VBProps.RING | VBProps.RECURRENT):
+            # bounded/constant-size by declared property: the aux image is
+            # O(window)+O(1) no matter how long the block decoded
+            aux = tuple(np.asarray(a) for a in jax.device_get(snapshot_aux(
+                self.pool.state, jnp.int32(block.slot),
+                self.pool.ring_row(block.slot))))
         img = _SwapImage(np.asarray(jax.device_get(k))[:, :n_pages],
                          np.asarray(jax.device_get(v))[:, :n_pages],
-                         n_pages, block.n_tokens)
+                         n_pages, block.n_tokens, aux=aux, charge=charge)
         self.swap.put(block.bid, img)
         self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
         self.mtl.disable_vb(0, block.vbid)
@@ -375,6 +424,10 @@ class VBIAllocator:
         self.pool.state = restore_block(
             self.pool.state, jnp.int32(slot), jnp.asarray(k), jnp.asarray(v),
             jnp.int32(img.n_pages), jnp.int32(img.n_tokens))
+        if img.aux is not None:
+            self.pool.state = restore_aux(
+                self.pool.state, jnp.int32(slot), self.pool.ring_row(slot),
+                *(jnp.asarray(a) for a in img.aux))
         block.slot = slot
         block.status = "resident"
         block.n_tokens = img.n_tokens

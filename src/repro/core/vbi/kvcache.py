@@ -29,6 +29,25 @@ from .address_space import VBProps
 from .mtl import MTL, PhysicalMemory
 
 
+def make_ring_table(max_seqs: int, ring_pages: int) -> np.ndarray:
+    """The RING pool's static translation (DESIGN.md §8): slot ``s``'s
+    frames are pages ``1 + s*ring_pages + i`` (page 0 = null, mirroring
+    the main pool).  The ONE definition of this layout — the engine's
+    jitted step writes through it and the allocator's swap restore
+    scatters through it, so the two can never drift."""
+    if ring_pages <= 0:
+        return np.zeros((max_seqs, 1), np.int32)
+    return (1 + np.arange(max_seqs)[:, None] * ring_pages
+            + np.arange(ring_pages)[None]).astype(np.int32)
+
+
+def aux_swap_charge(n_ring: int, ring_pages: int, n_recurrent: int) -> int:
+    """Host-tier charge (in pages) of one slot's RING + RECURRENT aux
+    image: the ring's capped frames plus one page-equivalent for the
+    constant-size recurrent state."""
+    return (ring_pages if n_ring else 0) + (1 if n_recurrent else 0)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PagedKVState:
@@ -119,6 +138,25 @@ class PagedServeState:
                            only when its count reaches zero, which is what
                            lets requests share prompt pages read-only
                            (``MTL.clone_vb`` semantics, DESIGN.md §5.1)
+
+    Property-typed per-layer-kind pools (DESIGN.md §8).  ``k_pages`` /
+    ``v_pages`` back only the *full-attention* layers; the other layer
+    kinds declare data properties the memory system exploits instead of
+    growing an unbounded paged stream:
+
+        k_ring, v_ring : [n_ring_layers, 1 + max_seqs*ring_pages, page_size,
+                          n_kv, head_dim] — sliding-window layers, RING
+                          (bounded liveness): a static per-slot page row,
+                          translation ``pos mod window`` inside the jitted
+                          step, frames reused in place (page 0 = null)
+        rg_h, rg_conv  : [n_rg_layers, max_seqs, ...] — RG-LRU recurrent
+                          state, RECURRENT (constant size)
+        ssm_state, ssm_conv : [n_ssm_layers, max_seqs, ...] — Mamba/SSD
+                          state, RECURRENT (constant size)
+
+    Kinds absent from the model carry zero-size arrays (zero bytes, zero
+    compute); a uniform GQA stack is the special case n_ring = n_rg =
+    n_ssm = 0.
     """
     k_pages: jax.Array
     v_pages: jax.Array
@@ -128,11 +166,18 @@ class PagedServeState:
     free_stack: jax.Array
     free_top: jax.Array
     page_refcounts: jax.Array
+    k_ring: jax.Array
+    v_ring: jax.Array
+    rg_h: jax.Array
+    rg_conv: jax.Array
+    ssm_state: jax.Array
+    ssm_conv: jax.Array
 
     def tree_flatten(self):
         return (self.k_pages, self.v_pages, self.page_table, self.seq_lens,
                 self.slot_active, self.free_stack, self.free_top,
-                self.page_refcounts), ()
+                self.page_refcounts, self.k_ring, self.v_ring, self.rg_h,
+                self.rg_conv, self.ssm_state, self.ssm_conv), ()
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
@@ -157,9 +202,18 @@ class PagedServeState:
 
 def init_serve_state(n_layers: int, n_pages: int, page_size: int, n_kv: int,
                      head_dim: int, max_seqs: int, max_pages_per_seq: int,
-                     dtype=jnp.float32) -> PagedServeState:
+                     dtype=jnp.float32, n_ring_layers: int = 0,
+                     ring_pages: int = 0, n_rg: int = 0, rnn_width: int = 0,
+                     conv_width: int = 4, n_ssm: int = 0, ssm_heads: int = 0,
+                     ssm_proj: int = 0, ssm_state_size: int = 0,
+                     ssm_conv_ch: int = 0, ssm_conv_width: int = 4
+                     ) -> PagedServeState:
     """Fresh pool.  Page 0 is the null page (scratch target for masked-out
-    slots, never attended to), so ``n_pages - 1`` pages are allocatable."""
+    slots, never attended to), so ``n_pages - 1`` pages are allocatable.
+    The ring pool likewise keeps page 0 as its null page; each slot's
+    ``ring_pages`` frames are static (``1 + slot*ring_pages + i``), so ring
+    translation needs no table state, only arithmetic."""
+    n_ring_pages = 1 + max_seqs * ring_pages if n_ring_layers else 1
     return PagedServeState(
         k_pages=jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
                           dtype),
@@ -171,18 +225,37 @@ def init_serve_state(n_layers: int, n_pages: int, page_size: int, n_kv: int,
         free_stack=jnp.arange(1, n_pages + 1, dtype=jnp.int32),
         free_top=jnp.asarray(n_pages - 1, jnp.int32),
         page_refcounts=jnp.zeros((n_pages,), jnp.int32),
+        k_ring=jnp.zeros((n_ring_layers, n_ring_pages, page_size, n_kv,
+                          head_dim), dtype),
+        v_ring=jnp.zeros((n_ring_layers, n_ring_pages, page_size, n_kv,
+                          head_dim), dtype),
+        rg_h=jnp.zeros((n_rg, max_seqs, rnn_width), jnp.float32),
+        rg_conv=jnp.zeros((n_rg, max_seqs, conv_width - 1, rnn_width),
+                          dtype),
+        ssm_state=jnp.zeros((n_ssm, max_seqs, ssm_heads, ssm_proj,
+                             ssm_state_size), jnp.float32),
+        ssm_conv=jnp.zeros((n_ssm, max_seqs, ssm_conv_width - 1,
+                            ssm_conv_ch), dtype),
     )
 
 
 @partial(jax.jit, donate_argnums=(0,))
 def admit_slot(state: PagedServeState, slot: jax.Array) -> PagedServeState:
     """Enable a VB for ``slot``: clears its translation row and length but
-    allocates NOTHING — backing pages arrive on first dirty writeback."""
+    allocates NOTHING — backing pages arrive on first dirty writeback.
+    RECURRENT state rows are zeroed (the previous occupant's constant-size
+    state would otherwise leak into the new request); RING frames need no
+    reset — their validity is ``min(seq_lens, window)``, which restarts at
+    zero with ``seq_lens``, so stale frames are never attended to."""
     return dataclasses.replace(
         state,
         page_table=state.page_table.at[slot].set(0),
         seq_lens=state.seq_lens.at[slot].set(0),
-        slot_active=state.slot_active.at[slot].set(True))
+        slot_active=state.slot_active.at[slot].set(True),
+        rg_h=state.rg_h.at[:, slot].set(0.0),
+        rg_conv=state.rg_conv.at[:, slot].set(0.0),
+        ssm_state=state.ssm_state.at[:, slot].set(0.0),
+        ssm_conv=state.ssm_conv.at[:, slot].set(0.0))
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -201,7 +274,10 @@ def release_slot(state: PagedServeState, slot: jax.Array) -> PagedServeState:
     pages = state.page_table[slot]
     refc = state.page_refcounts.at[
         jnp.where(mapped, pages, state.n_pages)].add(-1, mode="drop")
-    freed = mapped & (refc[pages] <= 0)
+    # the null page 0 is never freeable: a stack with no full-attention
+    # layers (RING/RECURRENT only, DESIGN.md §8) advances seq_lens without
+    # mapping pages, so its "mapped" lanes all point at page 0
+    freed = mapped & (pages != 0) & (refc[pages] <= 0)
     # scatter freed pages to [free_top, free_top + n_freed); other lanes
     # get an out-of-range index and are dropped.
     dst = jnp.where(freed, state.free_top + jnp.cumsum(freed) - 1,
@@ -338,7 +414,45 @@ def restore_block(state: PagedServeState, slot: jax.Array, k_blk: jax.Array,
         page_refcounts=state.page_refcounts.at[dst].set(1, mode="drop"))
 
 
-def reserve_positions(state: PagedServeState, slot_mask: jax.Array
+@jax.jit
+def snapshot_aux(state: PagedServeState, slot: jax.Array,
+                 ring_row: jax.Array) -> Tuple[jax.Array, ...]:
+    """Gather one slot's RING frames and RECURRENT state for the host swap
+    tier (DESIGN.md §8).  ``ring_row`` is the slot's static ring page row
+    ([ring_pages] int32).  RING snapshot is a dense gather of the capped
+    frames; RECURRENT snapshot is a dense copy of the constant-size state —
+    the properties make both O(window)/O(1), never O(tokens).  Control path
+    only: the caller ``device_get``s the result."""
+    return (state.k_ring[:, ring_row], state.v_ring[:, ring_row],
+            state.rg_h[:, slot], state.rg_conv[:, slot],
+            state.ssm_state[:, slot], state.ssm_conv[:, slot])
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def restore_aux(state: PagedServeState, slot: jax.Array,
+                ring_row: jax.Array, k_ring_blk: jax.Array,
+                v_ring_blk: jax.Array, rg_h: jax.Array, rg_conv: jax.Array,
+                ssm_state: jax.Array, ssm_conv: jax.Array
+                ) -> PagedServeState:
+    """Swap-in counterpart of :func:`snapshot_aux`: scatter the host-tier
+    RING frames back into the slot's static ring pages and the RECURRENT
+    state into its rows — one jitted dispatch, exact state."""
+    return dataclasses.replace(
+        state,
+        k_ring=state.k_ring.at[:, ring_row].set(
+            k_ring_blk.astype(state.k_ring.dtype)),
+        v_ring=state.v_ring.at[:, ring_row].set(
+            v_ring_blk.astype(state.v_ring.dtype)),
+        rg_h=state.rg_h.at[:, slot].set(rg_h),
+        rg_conv=state.rg_conv.at[:, slot].set(
+            rg_conv.astype(state.rg_conv.dtype)),
+        ssm_state=state.ssm_state.at[:, slot].set(ssm_state),
+        ssm_conv=state.ssm_conv.at[:, slot].set(
+            ssm_conv.astype(state.ssm_conv.dtype)))
+
+
+def reserve_positions(state: PagedServeState, slot_mask: jax.Array,
+                      has_full: bool = True
                       ) -> Tuple[PagedServeState, jax.Array]:
     """Reserve the next token position for every masked slot — the paper's
     "allocate on first dirty writeback" resolved entirely on device.
@@ -348,7 +462,17 @@ def reserve_positions(state: PagedServeState, slot_mask: jax.Array
     no host).  Returns (state', positions) where positions[i] is where slot
     i's K/V land this step.  The scheduler guarantees the stack never
     underflows (host mirrors the page accounting exactly).
+
+    ``has_full=False`` (static) is the property-typed fast path for stacks
+    with NO full-attention layers (pure ring/recurrent — e.g. mixtral SWA,
+    recurrentgemma, mamba2): every layer's footprint is bounded or
+    constant, so no page is ever popped — positions just advance.
     """
+    if not has_full:
+        positions = state.seq_lens
+        return dataclasses.replace(
+            state, seq_lens=positions + slot_mask.astype(jnp.int32)
+        ), positions
     ps = state.page_size
     positions = state.seq_lens                              # [S]
     needs = slot_mask & (positions % ps == 0)               # [S] bool

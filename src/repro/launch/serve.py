@@ -17,7 +17,15 @@ resume with one device scatter instead of re-prefilling.
 decoding slots advance K tokens per jitted dispatch — sampling, token
 feedback and stopping all on device — so the host syncs once per horizon
 instead of once per token.  ``--legacy`` runs the per-sequence reference
-path (serve/paged.py) for comparison.
+path (serve/paged.py, uniform stacks only) for comparison.
+
+Any decoder-only ``--arch`` serves through property-typed cache blocks
+(DESIGN.md §8): gemma3's local/global pattern, mixtral's SWA MoE,
+recurrentgemma's RG-LRU hybrid and mamba2's SSM included — windowed
+layers on capped RING frames, recurrent layers on constant-size state.
+The prefix cache auto-disables for such stacks (RING/RECURRENT blocks
+are ineligible for sharing).  ``--attn-impl {gather,kernel}`` selects
+the XLA gather path or the Pallas paged-attention kernel.
 """
 from __future__ import annotations
 
@@ -37,10 +45,15 @@ from ..serve.scheduler import Scheduler
 
 
 def serve_config(arch: str, smoke: bool = True):
-    """Dense-GQA float32 config for the paged serve paths (shared by the
-    launcher, benchmarks, and tests so they can never diverge)."""
+    """Float32 serve config for the paged serve paths (shared by the
+    launcher, benchmarks, and tests so they can never diverge).
+
+    With property-typed cache blocks (DESIGN.md §8) the engine serves any
+    decoder-only stack — uniform GQA, gemma3 local/global, mixtral SWA MoE,
+    recurrentgemma rglru-hybrid, mamba2 SSM.  Only encoder-decoder
+    (whisper) falls back to the dense stand-in."""
     cfg = smoke_config(arch) if smoke else get_config(arch)
-    if cfg.family not in ("dense", "vlm") or cfg.local_global_period:
+    if cfg.is_encdec:
         cfg = dataclasses.replace(
             smoke_config("qwen3-0.6b"), name=cfg.name + "-as-dense")
     return dataclasses.replace(cfg, param_dtype="float32",
@@ -70,12 +83,24 @@ def main(argv=None) -> None:
                          "slots advance K tokens per jitted dispatch with "
                          "on-device sampling and stopping; the host syncs "
                          "once per horizon instead of once per token")
+    ap.add_argument("--attn-impl", default="gather",
+                    choices=("gather", "kernel"),
+                    help="paged attention implementation: 'gather' (XLA "
+                         "batched gather, default) or 'kernel' (the Pallas "
+                         "paged-attention kernel — lowers for real on TPU, "
+                         "interpret mode elsewhere)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="per-sequence reference path (serve/paged.py)")
     args = ap.parse_args(argv)
 
     cfg = serve_config(args.arch, args.smoke)
+    if args.legacy and (cfg.family not in ("dense", "vlm")
+                        or cfg.local_global_period or cfg.rglru_period
+                        or cfg.window):
+        ap.error(f"--legacy (serve/paged.py) only supports uniform dense "
+                 f"GQA stacks; {cfg.name} needs the property-typed engine "
+                 f"(drop --legacy)")
     params = init_params(cfg, jax.random.key(args.seed))
     rng = np.random.default_rng(args.seed)
     system = rng.integers(0, cfg.vocab, args.shared_prefix).tolist()
@@ -91,9 +116,19 @@ def main(argv=None) -> None:
             cfg, params, page_size=page_size, max_seqs=args.batch_slots,
             n_pages=1 + args.batch_slots * (32 + args.shared_prefix
                                             // page_size),
-            host_swap_pages=args.host_swap_pages)
+            host_swap_pages=args.host_swap_pages,
+            attn_impl=args.attn_impl)
+        g = engine.geom
+        print(f"[serve] {cfg.name}: layer kinds full={g.n_full} "
+              f"ring={g.n_ring} (window={g.window}) rglru={g.n_rg} "
+              f"ssm={g.n_ssm} — attn_impl={args.attn_impl}")
         cache = (None if args.no_prefix_cache
                  else PrefixCache(page_size=page_size))
+        if cache is not None and not engine.supports_prefix_sharing:
+            print("[serve] prefix cache disabled: RING/RECURRENT layers "
+                  "are ineligible for cross-request page sharing "
+                  "(DESIGN.md §8)")
+            cache = None
         sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
                           prefix_cache=cache,
                           decode_horizon=args.decode_horizon)

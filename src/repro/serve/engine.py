@@ -21,9 +21,30 @@ the data-centric rewrite (DESIGN.md §5):
   * chunked prefill scans whole prompt chunks inside one dispatch, with
     the next-token argmax inside the jit so only [S] int32 ever crosses.
 
+Heterogeneous layer stacks (DESIGN.md §8): the engine partitions
+``cfg.layer_kinds()`` into property-typed groups and gives each its own
+cache state —
+
+  * **full** attention layers keep the unbounded paged pool + page table;
+  * **ring** layers (sliding-window 'local'/SWA) have *bounded liveness*:
+    only the last ``window`` tokens are ever read, so they get a static
+    per-slot ring of ``window/page_size`` pages, translation ``pos mod
+    window`` resolved inside the jitted step — footprint capped, frames
+    reused in place, no pool pressure ever;
+  * **recurrent** layers (RG-LRU / Mamba-SSD) have *constant size*: a
+    fixed per-slot state buffer, zero per-token growth.
+
+The stack is scanned per config stage (``lax.scan`` over each stage's
+period, params stacked per period entry), so gemma3's 5-local:1-global
+pattern, mixtral's all-SWA MoE stack, recurrentgemma's R,R,A hybrid and
+mamba2's attention-free stack all compile to O(period) HLO and serve
+through the same jitted dispatch as a uniform GQA stack.
+
 Attention resolves page translation on device either via the batched
 gather path (XLA, default on CPU) or the Pallas paged-attention kernel
-(``attn_impl="kernel"``, interpret-mode off-TPU).
+(``attn_impl="kernel"``, interpret-mode off-TPU); both take (page row,
+valid length) so the ring pool rides the exact same two paths with its
+static row and ``min(seq_len, window)``.
 """
 from __future__ import annotations
 
@@ -33,18 +54,129 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
+from ..core.vbi.address_space import VBProps
 from ..core.vbi.blocks import VBIAllocator
-from ..core.vbi.kvcache import (PagedServeState, fused_decode_scan,
-                                init_serve_state, reserve_positions,
+from ..core.vbi.kvcache import (PagedServeState, aux_swap_charge,
+                                fused_decode_scan, init_serve_state,
+                                make_ring_table, reserve_positions,
                                 write_token_kv)
 from ..core.vbi.mtl import MTL
 from ..kernels.paged_attention.kernel import paged_attn_one_seq
-from ..models.config import ModelConfig
-from ..models.layers import mlp, rms_norm
+from ..models.config import LayerSpec, ModelConfig
+from ..models.layers import mlp, moe, rms_norm
 from ..models.model import _logits
+from ..models.rglru import rglru_decode_step
+from ..models.ssm import mamba_decode_step, ssm_dims
 from .paged import _qkv_ragged
+
+
+# --------------------------------------------------------------------------
+# the property-typed stack geometry (static; drives pool shapes + the step)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One config stage, serving view: per period entry its kind, spec and
+    the [count] global within-kind layer indices the scan consumes."""
+    count: int
+    kinds: Tuple[str, ...]
+    specs: Tuple[LayerSpec, ...]
+    entry_indices: Tuple[Tuple[int, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StackGeom:
+    """The layer stack partitioned by data property (DESIGN.md §8):
+    'full' = unbounded paged KV, 'ring' = bounded liveness (window),
+    'rglru'/'mamba' = constant-size recurrent state."""
+    kinds: Tuple[str, ...]
+    n_full: int
+    n_ring: int
+    n_rg: int
+    n_ssm: int
+    window: int                      # shared ring window (0 = no ring)
+    ring_pages: int
+    stage_plans: Tuple[StagePlan, ...]
+
+    @property
+    def has_full(self) -> bool:
+        return self.n_full > 0
+
+    @property
+    def n_recurrent(self) -> int:
+        return self.n_rg + self.n_ssm
+
+    @property
+    def uniform_paged(self) -> bool:
+        """True iff every layer is full attention — the only shape whose
+        KV pages are position-addressed and therefore prefix-shareable."""
+        return self.n_ring == 0 and self.n_recurrent == 0
+
+    @property
+    def kind_props(self) -> VBProps:
+        props = VBProps.NONE
+        if self.n_ring:
+            props |= VBProps.RING
+        if self.n_recurrent:
+            props |= VBProps.RECURRENT
+        return props
+
+
+def _entry_kind(spec: LayerSpec) -> str:
+    # cfg.stages() stamps the effective window onto every spec (uniform
+    # SWA included), so spec.window alone decides — no cfg.window
+    # fallback, which would misclassify the global layers of a
+    # local/global stack that also sets cfg.window
+    if spec.kind in ("attn", "local"):
+        return "ring" if spec.window else "full"
+    return spec.kind                                 # 'rglru' | 'mamba'
+
+
+def build_stack_geom(cfg: ModelConfig, page_size: int) -> StackGeom:
+    """Classify ``cfg``'s layer stack into property-typed groups and lay
+    out per-stage scan plans.  Raises for shapes the serve engine cannot
+    express (encoder-decoder; ring windows not page-aligned)."""
+    if cfg.is_encdec:
+        raise ValueError(f"{cfg.name}: encoder-decoder models are not "
+                         f"servable through PagedEngine")
+    counts = {"full": 0, "ring": 0, "rglru": 0, "mamba": 0}
+    windows = set()
+    plans = []
+    for st in cfg.stages():
+        kinds = tuple(_entry_kind(sp) for sp in st.period)
+        per_kind = {k: sum(1 for kk in kinds if kk == k) for k in set(kinds)}
+        rank = {k: 0 for k in set(kinds)}
+        idx = []
+        for sp, k in zip(st.period, kinds):
+            idx.append(tuple(counts[k] + per_kind[k] * j + rank[k]
+                             for j in range(st.count)))
+            rank[k] += 1
+            if k == "ring":
+                windows.add(sp.window)
+        for k, n in per_kind.items():
+            counts[k] += n * st.count
+        plans.append(StagePlan(st.count, kinds, tuple(st.period),
+                               tuple(idx)))
+    window = 0
+    if windows:
+        if len(windows) != 1:
+            raise ValueError(f"{cfg.name}: ring layers must share one "
+                             f"window, got {sorted(windows)}")
+        window = windows.pop()
+        if window % page_size:
+            raise ValueError(
+                f"{cfg.name}: sliding window {window} must be a multiple "
+                f"of page_size {page_size} so ring translation stays "
+                f"page-exact — pick a page_size dividing the window")
+    return StackGeom(
+        kinds=tuple(k for p in plans for _ in range(p.count)
+                    for k in p.kinds),
+        n_full=counts["full"], n_ring=counts["ring"], n_rg=counts["rglru"],
+        n_ssm=counts["mamba"], window=window,
+        ring_pages=window // page_size if window else 0,
+        stage_plans=tuple(plans))
 
 
 # --------------------------------------------------------------------------
@@ -57,6 +189,8 @@ def batched_paged_attention(q: jax.Array, k_pages_l: jax.Array,
 
     q [S, n_kv, g, hd] (pre-scaled f32); k/v_pages_l [n_pages, ps, n_kv, hd];
     page_table [S, max_pages_per_seq]; seq_lens [S] → out [S, n_kv, g, hd].
+    The ring pool uses the same contract with its static page row and
+    ``seq_lens`` clipped to the window.
     """
     pts = page_table[:, :max_pages]                       # [S, P]
     S, P = pts.shape
@@ -89,41 +223,92 @@ def _kernel_paged_attention(q, k_pages_l, v_pages_l, page_table, seq_lens,
 # --------------------------------------------------------------------------
 # the jitted token step (shared by decode and chunked prefill)
 # --------------------------------------------------------------------------
-def _token_step(cfg: ModelConfig, max_pages: int, attn_impl: str, params,
+def _token_step(cfg: ModelConfig, geom: StackGeom, max_pages: int,
+                attn_impl: str, ring_table: jax.Array, params,
                 state: PagedServeState, tokens: jax.Array,
                 slot_mask: jax.Array) -> Tuple[jax.Array, PagedServeState]:
-    """One token for every masked slot: reserve → scan layers (KV scatter +
-    paged attention + MLP) → logits.  Pure; everything stays on device."""
-    state, positions = reserve_positions(state, slot_mask)
+    """One token for every masked slot through the *heterogeneous* stack:
+    reserve → per-stage scan (each period entry branches by its static
+    kind: paged / ring KV scatter + attention, or recurrent update) →
+    logits.  Pure; everything stays on device."""
+    state, positions = reserve_positions(state, slot_mask,
+                                         has_full=geom.has_full)
     x = params["embed"][tokens].astype(jnp.float32)[:, None, :]   # [S,1,d]
-    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
-    stacked = params["stages"][0][0]                    # layer-stacked pytree
-    n_layers = jax.tree.leaves(stacked)[0].shape[0]
     attn_fn = (_kernel_paged_attention if attn_impl == "kernel"
                else batched_paged_attention)
+    if geom.n_full or geom.n_ring:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    if geom.n_ring:
+        ring_pos = positions % geom.window
+        ring_lens = jnp.minimum(state.seq_lens, geom.window)
 
-    def body(carry, xs):
-        x, k_pages, v_pages = carry
-        lp, li = xs
+    def apply_entry(kind: str, spec: LayerSpec, lp, li, x, pools):
+        k_pages, v_pages, k_ring, v_ring, rg_h, rg_conv, ssm_st, ssm_cv = \
+            pools
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
-        q, k, v = _qkv_ragged(cfg, lp["attn"], h, positions)
-        k_pages, v_pages = write_token_kv(
-            k_pages, v_pages, li, state.page_table, positions, slot_mask,
-            k[:, :, 0], v[:, :, 0])
-        qg = (q[:, :, 0].astype(jnp.float32) * scale).reshape(
-            q.shape[0], cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.head_dim)
-        o = attn_fn(qg, k_pages[li], v_pages[li], state.page_table,
-                    state.seq_lens, max_pages)
-        o = o.reshape(o.shape[0], 1, -1).astype(x.dtype)
-        x = x + o @ lp["attn"]["wo"]
-        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
-        x = x + mlp(lp["mlp"], h2, cfg.act)
-        return (x, k_pages, v_pages), None
+        if kind in ("full", "ring"):
+            q, k, v = _qkv_ragged(cfg, lp["attn"], h, positions)
+            qg = (q[:, :, 0].astype(jnp.float32) * scale).reshape(
+                q.shape[0], cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.head_dim)
+            if kind == "full":
+                k_pages, v_pages = write_token_kv(
+                    k_pages, v_pages, li, state.page_table, positions,
+                    slot_mask, k[:, :, 0], v[:, :, 0])
+                o = attn_fn(qg, k_pages[li], v_pages[li], state.page_table,
+                            state.seq_lens, max_pages)
+            else:
+                # bounded liveness exploited: translation pos mod window
+                # into the slot's static ring row; frames reuse in place
+                k_ring, v_ring = write_token_kv(
+                    k_ring, v_ring, li, ring_table, ring_pos, slot_mask,
+                    k[:, :, 0], v[:, :, 0])
+                o = attn_fn(qg, k_ring[li], v_ring[li], ring_table,
+                            ring_lens, geom.ring_pages)
+            o = o.reshape(o.shape[0], 1, -1).astype(x.dtype)
+            x = x + o @ lp["attn"]["wo"]
+        elif kind == "rglru":
+            o, hh, cv = rglru_decode_step(lp["rglru"], h, rg_h[li],
+                                          rg_conv[li], cfg)
+            rg_h = rg_h.at[li].set(
+                jnp.where(slot_mask[:, None], hh, rg_h[li]))
+            rg_conv = rg_conv.at[li].set(
+                jnp.where(slot_mask[:, None, None], cv, rg_conv[li]))
+            x = x + o
+        else:                                            # mamba
+            o, st2, cv = mamba_decode_step(lp["mamba"], h, ssm_st[li],
+                                           ssm_cv[li], cfg)
+            ssm_st = ssm_st.at[li].set(
+                jnp.where(slot_mask[:, None, None, None], st2, ssm_st[li]))
+            ssm_cv = ssm_cv.at[li].set(
+                jnp.where(slot_mask[:, None, None], cv, ssm_cv[li]))
+            x = x + o
+        if kind != "mamba":                              # channel mixer
+            h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y = (moe(lp["moe"], h2, cfg) if spec.moe
+                 else mlp(lp["mlp"], h2, cfg.act))
+            x = x + y
+        return x, (k_pages, v_pages, k_ring, v_ring, rg_h, rg_conv,
+                   ssm_st, ssm_cv)
 
-    (x, k_pages, v_pages), _ = lax.scan(
-        body, (x, state.k_pages, state.v_pages),
-        (stacked, jnp.arange(n_layers)))
-    state = dataclasses.replace(state, k_pages=k_pages, v_pages=v_pages)
+    pools = (state.k_pages, state.v_pages, state.k_ring, state.v_ring,
+             state.rg_h, state.rg_conv, state.ssm_state, state.ssm_conv)
+    for plan, sp in zip(geom.stage_plans, params["stages"]):
+        idxs = tuple(jnp.asarray(ix, jnp.int32) for ix in plan.entry_indices)
+
+        def body(carry, xs, plan=plan):
+            x, pools = carry
+            entry_params, entry_idx = xs
+            for i in range(len(plan.kinds)):
+                x, pools = apply_entry(plan.kinds[i], plan.specs[i],
+                                       entry_params[i], entry_idx[i],
+                                       x, pools)
+            return (x, pools), None
+
+        (x, pools), _ = lax.scan(body, (x, pools), (tuple(sp), idxs))
+    state = dataclasses.replace(
+        state, k_pages=pools[0], v_pages=pools[1], k_ring=pools[2],
+        v_ring=pools[3], rg_h=pools[4], rg_conv=pools[5],
+        ssm_state=pools[6], ssm_conv=pools[7])
     return _logits(cfg, params, x), state
 
 
@@ -131,13 +316,16 @@ def _token_step(cfg: ModelConfig, max_pages: int, attn_impl: str, params,
 # the engine
 # --------------------------------------------------------------------------
 class PagedEngine:
-    """Continuous-batching serve engine for uniform dense GQA stacks.
+    """Continuous-batching serve engine over property-typed cache blocks.
 
-    The engine is now *compute only*: the per-token fast path is a single
-    donated jit dispatch over the device page pool.  ALL page lifecycle —
-    allocation, sharing, COW, pinning, swap, release — goes through
-    ``self.alloc`` (:class:`~repro.core.vbi.blocks.VBIAllocator`, the VBI
-    memory API, DESIGN.md §6); policy lives in serve/scheduler.py.
+    Any decoder-only stack ``cfg.stages()`` can express is served: uniform
+    dense/GQA, local/global (gemma3), all-SWA MoE (mixtral), rglru hybrid
+    (recurrentgemma), pure SSM (mamba2).  The engine is *compute only*:
+    the per-token fast path is a single donated jit dispatch over the
+    device pools.  ALL page lifecycle — allocation, sharing, COW, pinning,
+    swap, release — goes through ``self.alloc``
+    (:class:`~repro.core.vbi.blocks.VBIAllocator`, the VBI memory API,
+    DESIGN.md §6); policy lives in serve/scheduler.py.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_pages: int = 256,
@@ -145,11 +333,10 @@ class PagedEngine:
                  max_pages_per_seq: Optional[int] = None,
                  attn_impl: str = "gather", mtl: Optional[MTL] = None,
                  host_swap_pages: int = 0, eos_id: int = -1):
-        assert not cfg.local_global_period and not cfg.rglru_period \
-            and cfg.family in ("dense", "vlm"), \
-            "paged engine supports uniform GQA stacks"
         assert attn_impl in ("gather", "kernel")
+        geom = build_stack_geom(cfg, page_size)
         self.cfg = cfg
+        self.geom = geom
         self.params = params
         self.page_size = page_size
         self.n_pages = n_pages
@@ -164,14 +351,29 @@ class PagedEngine:
         # produced are reconciled host-side from the returned block.
         self.stats = {"decode_steps": 0, "decode_dispatches": 0,
                       "prefill_chunks": 0}
+        rnn_w = (cfg.rnn_width or cfg.d_model) if geom.n_rg else 0
+        ssm_H = ssm_P = ssm_conv_ch = 0
+        if geom.n_ssm:
+            d_inner, ssm_H, ssm_P = ssm_dims(cfg)
+            ssm_conv_ch = d_inner + 2 * cfg.ssm_state
         self.state = init_serve_state(
-            n_layers=cfg.n_layers, n_pages=n_pages, page_size=page_size,
+            n_layers=geom.n_full, n_pages=n_pages, page_size=page_size,
             n_kv=cfg.n_kv, head_dim=cfg.head_dim, max_seqs=max_seqs,
-            max_pages_per_seq=self.max_pages, dtype=jnp.float32)
+            max_pages_per_seq=self.max_pages, dtype=jnp.float32,
+            n_ring_layers=geom.n_ring, ring_pages=geom.ring_pages,
+            n_rg=geom.n_rg, rnn_width=rnn_w, conv_width=cfg.conv_width,
+            n_ssm=geom.n_ssm, ssm_heads=ssm_H, ssm_proj=ssm_P,
+            ssm_state_size=cfg.ssm_state, ssm_conv_ch=ssm_conv_ch)
+        # a slot's ring frames are STATIC (kvcache.py::make_ring_table):
+        # translation is arithmetic, page 0 stays null for masked-out
+        # lanes (mirrors the main pool's null page)
+        self.ring_table_np = make_ring_table(max_seqs, geom.ring_pages)
+        ring_table = jnp.asarray(self.ring_table_np)
         # the engine satisfies the allocator's pool protocol (.state + geom)
         self.alloc = VBIAllocator(self, host_swap_pages=host_swap_pages,
                                   mtl=mtl)
-        self._step = partial(_token_step, cfg, self.max_pages, attn_impl)
+        self._step = partial(_token_step, cfg, geom, self.max_pages,
+                             attn_impl, ring_table)
 
         def _decode(params, state, tokens, slot_mask):
             return self._step(params, state, tokens, slot_mask)
@@ -196,6 +398,31 @@ class PagedEngine:
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._decode_many: Dict[int, object] = {}   # horizon K -> jitted fn
+
+    # -- the property-typed pool protocol (read by allocator + scheduler) ---
+    @property
+    def has_full(self) -> bool:
+        """False for stacks with no full-attention layer: nothing ever
+        pops a pool page, so the page budget is identically zero."""
+        return self.geom.has_full
+
+    @property
+    def supports_prefix_sharing(self) -> bool:
+        return self.geom.uniform_paged
+
+    @property
+    def kind_props(self) -> VBProps:
+        return self.geom.kind_props
+
+    @property
+    def aux_swap_pages(self) -> int:
+        """Host-tier charge (in pages) of one slot's RING + RECURRENT
+        state (kvcache.py::aux_swap_charge)."""
+        return aux_swap_charge(self.geom.n_ring, self.geom.ring_pages,
+                               self.geom.n_recurrent)
+
+    def ring_row(self, slot: int) -> jax.Array:
+        return jnp.asarray(self.ring_table_np[slot])
 
     # -- the fast paths ------------------------------------------------------
     def decode(self, tokens: jax.Array, slot_mask: jax.Array) -> jax.Array:

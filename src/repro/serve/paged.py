@@ -84,9 +84,12 @@ def _qkv_ragged(cfg: ModelConfig, p, x, positions):
     """Like model._qkv but with a per-sequence position vector [B]."""
     B, S, d = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
-    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
-    k = (x @ p["wk"]).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
-    v = (x @ p["wv"]).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    q = (x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+         ).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+         ).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+         ).reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)

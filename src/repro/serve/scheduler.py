@@ -100,6 +100,14 @@ class Scheduler:
                  decode_horizon: int = 1):
         if prefix_cache is not None:
             assert prefix_cache.page_size == engine.page_size
+            # RING frames are position-recycled and RECURRENT state is not
+            # page-addressed (DESIGN.md §8): neither survives outside its
+            # slot, so cross-request page sharing only exists for uniform
+            # full-attention stacks
+            assert engine.supports_prefix_sharing, \
+                f"{engine.cfg.name}: prefix cache requires a uniform " \
+                f"full-attention stack (RING/RECURRENT layers are " \
+                f"ineligible for sharing)"
         assert decode_horizon >= 1
         self.engine = engine
         self.alloc = engine.alloc          # the one memory API
@@ -133,27 +141,35 @@ class Scheduler:
     # -- request intake ------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int,
                     rid: Optional[int] = None) -> int:
-        # lifetime length must fit one slot's page-table row — past it the
-        # device scatter would silently drop (KV corruption), so refuse now
+        # Per-kind worst-case footprint (DESIGN.md §8): only FULL-attention
+        # layers consume pool pages, so the intake checks below only bind
+        # when the stack has any — a pure RING/RECURRENT stack (mixtral
+        # SWA, recurrentgemma, mamba2) has bounded/constant footprint and
+        # admits any lifetime.
         lifetime = len(prompt) + max_new
-        cap = self.engine.max_pages * self.engine.page_size
-        if lifetime > cap:
-            raise ValueError(
-                f"request needs {lifetime} tokens > per-slot capacity "
-                f"{cap} (max_pages_per_seq={self.engine.max_pages} × "
-                f"page_size={self.engine.page_size})")
-        # ... and its page budget must fit the pool at all.  Pages the
-        # prefix cache could share cut the budget, so only reject what no
-        # amount of sharing can save (full prompt pages shareable at best).
-        pool = self.engine.n_pages - 1
-        shareable = (len(prompt) // self.engine.page_size
-                     if self.prefix_cache is not None else 0)
-        min_budget = self.alloc.pages_for(lifetime) + 1 - shareable
-        if min_budget > pool:
-            raise ValueError(
-                f"request needs {min_budget} pages over its lifetime > "
-                f"pool capacity {pool} (n_pages={self.engine.n_pages} "
-                f"incl. null page) — it can never be scheduled")
+        if self.engine.has_full:
+            # lifetime length must fit one slot's page-table row — past it
+            # the device scatter would silently drop (KV corruption), so
+            # refuse now
+            cap = self.engine.max_pages * self.engine.page_size
+            if lifetime > cap:
+                raise ValueError(
+                    f"request needs {lifetime} tokens > per-slot capacity "
+                    f"{cap} (max_pages_per_seq={self.engine.max_pages} × "
+                    f"page_size={self.engine.page_size})")
+            # ... and its page budget must fit the pool at all.  Pages the
+            # prefix cache could share cut the budget, so only reject what
+            # no amount of sharing can save (full prompt pages shareable
+            # at best).
+            pool = self.engine.n_pages - 1
+            shareable = (len(prompt) // self.engine.page_size
+                         if self.prefix_cache is not None else 0)
+            min_budget = self.alloc.pages_for(lifetime) + 1 - shareable
+            if min_budget > pool:
+                raise ValueError(
+                    f"request needs {min_budget} pages over its lifetime > "
+                    f"pool capacity {pool} (n_pages={self.engine.n_pages} "
+                    f"incl. null page) — it can never be scheduled")
         rid = self._next_rid if rid is None else rid
         self._next_rid = max(self._next_rid, rid) + 1
         self.queue.append(Request(rid, list(prompt), max_new))
@@ -170,6 +186,10 @@ class Scheduler:
         # from the prefix cache are not the block's to allocate.
         # ``horizon=1`` is the minimum viable budget, used for
         # intake/impossibility checks and as the admission fallback.
+        # Stacks with no full-attention layer never touch the pool: their
+        # RING/RECURRENT footprint is static per slot, budget ≡ 0.
+        if not self.engine.has_full:
+            return 0
         rem = max(1, req.max_new - len(req.out))
         span = len(req.tokens) + min(horizon, rem) - 1
         return self.alloc.pages_for(span) + 1 - n_shared

@@ -30,10 +30,15 @@ from repro.core.vbi.blocks import (LegacyKVAllocator, PagePool, VBIAllocator)
 from repro.core.vbi.kvcache import PagedKVManager, reserve_positions
 
 
-def _mk(n_pages=33, page_size=2, max_seqs=4, rowP=8, swap=0):
-    pool = PagePool(n_layers=1, n_pages=n_pages, page_size=page_size,
+def _mk(n_pages=33, page_size=2, max_seqs=4, rowP=8, swap=0,
+        n_layers=1, ring=0, rg=0):
+    """``ring``/``rg`` add RING / RECURRENT layer groups (DESIGN.md §8);
+    ``n_layers=0`` makes a pool with NO full-attention layers (pure
+    bounded/constant footprint — page budget identically zero)."""
+    pool = PagePool(n_layers=n_layers, n_pages=n_pages, page_size=page_size,
                     n_kv=1, head_dim=2, max_seqs=max_seqs,
-                    max_pages_per_seq=rowP)
+                    max_pages_per_seq=rowP, ring_layers=ring, ring_pages=2,
+                    rg_layers=rg, rnn_width=4)
     return pool, VBIAllocator(pool, host_swap_pages=swap)
 
 
@@ -44,7 +49,8 @@ def _feed(pool, al, blk, n=1):
         al.reserve(blk, blk.n_tokens + 1)
         mask = np.zeros((pool.max_seqs,), bool)
         mask[blk.slot] = True
-        pool.state, _ = reserve_positions(pool.state, jnp.asarray(mask))
+        pool.state, _ = reserve_positions(pool.state, jnp.asarray(mask),
+                                          has_full=pool.has_full)
         al.commit(blk, blk.n_tokens + 1)
 
 
@@ -54,6 +60,7 @@ def _conservation(pool, al, blocks, ledger):
     st = pool.state
     refc = np.asarray(st.page_refcounts)
     free_top = int(st.free_top)
+    assert free_top <= pool.n_pages - 1         # stack never over-fills
     in_use = pool.n_pages - 1 - free_top
     assert int((refc > 0).sum()) == in_use
     stack = np.asarray(st.free_stack[:free_top]).tolist()
@@ -68,7 +75,10 @@ def _conservation(pool, al, blocks, ledger):
     for blk in blocks:
         if blk.status != "resident":
             continue
-        n = -(-int(lens[blk.slot]) // pool.page_size)
+        # a pool with no full-attention layers maps NO pages however long
+        # the block decodes — that is the RING/RECURRENT property claim
+        n = (-(-int(lens[blk.slot]) // pool.page_size)
+             if pool.has_full else 0)
         expected_refs += n
         mapped.update(pt[blk.slot, :n].tolist())
     assert int(refc.sum()) == expected_refs
@@ -92,14 +102,23 @@ def test_block_lifecycle_and_double_free_noop():
     al.alloc(0)                                  # slot is reusable after
 
 
-def test_refcount_conservation_random_traces():
+@pytest.mark.parametrize("flavor", ["uniform", "hetero", "ring-recurrent"])
+def test_refcount_conservation_random_traces(flavor):
     """Property-style sweep: random admit/feed/share/COW/swap/release
-    traces, conservation checked after every op."""
+    traces, conservation checked after every op.  Three pool flavors
+    (DESIGN.md §8): 'uniform' (all full attention, as before), 'hetero'
+    (full + RING + RECURRENT groups — swap images carry the aux state,
+    sharing ops are ineligible), and 'ring-recurrent' (NO full layers —
+    the page budget is identically zero, the pool never moves)."""
     ps, rowP, max_seqs = 2, 8, 4
-    for seed in range(4):
+    kinds = {"uniform": dict(),
+             "hetero": dict(ring=2, rg=1),
+             "ring-recurrent": dict(n_layers=0, ring=2, rg=1)}[flavor]
+    shareable = flavor == "uniform"     # RING/RECURRENT: no prefix sharing
+    for seed in range(4 if flavor == "uniform" else 2):
         rng = np.random.default_rng(seed)
         pool, al = _mk(n_pages=33, page_size=ps, max_seqs=max_seqs,
-                       rowP=rowP, swap=16)
+                       rowP=rowP, swap=16, **kinds)
         blocks = []                  # every block ever allocated
         ledger = []                  # pages on the cache ledger
         pinned_by = {}               # ledger page -> mapping live blocks
@@ -137,11 +156,12 @@ def test_refcount_conservation_random_traces():
                     for _ in range(j):
                         mask = np.zeros((pool.max_seqs,), bool)
                         mask[blk.slot] = True
-                        pool.state, _ = reserve_positions(pool.state,
-                                                          jnp.asarray(mask))
+                        pool.state, _ = reserve_positions(
+                            pool.state, jnp.asarray(mask),
+                            has_full=pool.has_full)
                     al.commit(blk, n0 + j)
                     al.unreserve(blk, n0 + j)
-            elif op == "cache_insert" and resident:
+            elif op == "cache_insert" and resident and shareable:
                 # scheduler protocol: move owned full pages to the ledger
                 blk = resident[rng.integers(len(resident))]
                 n_full = blk.n_tokens // ps
@@ -225,6 +245,29 @@ def test_swap_out_respects_declared_properties():
     _feed(pool, al, late, 3)
     assert not al.swap_out(late)                 # tier capacity enforced
     assert al.stats["swap_rejects"] == 1
+
+
+def test_hetero_swap_image_carries_aux_and_charges_tier():
+    """A RING/RECURRENT block's swap image includes the aux state (ring
+    frames + recurrent rows) and charges the host tier for it — bounded by
+    the declared properties, never by the token count."""
+    pool, al = _mk(swap=8, ring=2, rg=1)        # aux charge = 2 + 1 = 3
+    blk = al.alloc(0)
+    assert blk.props & (VBProps.RING | VBProps.RECURRENT)
+    _feed(pool, al, blk, 4)                     # 2 full pages @ ps=2
+    assert al.swap_out(blk)
+    img = al.swap.images[blk.bid]
+    assert img.aux is not None and img.charge == img.n_pages + 3 == 5
+    assert al.swap.used_pages == 5
+    blk2 = al.alloc(1)
+    _feed(pool, al, blk2, 4)
+    assert not al.swap_out(blk2)                # 3 left < 5: tier enforced
+    assert al.stats["swap_rejects"] == 1
+    al.swap_in(blk, 2)
+    assert al.swap.used_pages == 0
+    al.free(blk)
+    al.free(blk2)
+    assert al.free_pages == int(pool.state.free_top) == pool.n_pages - 1
 
 
 def test_legacy_manager_wrapped_as_oracle():
@@ -356,10 +399,12 @@ def test_raw_page_ops_gated_to_core_vbi():
     through the engine + allocator, so horizon code cannot grow a side
     channel around the reservation protocol."""
     root = pathlib.Path(__file__).resolve().parent.parent
-    # every raw PagedServeState lifecycle op
+    # every raw PagedServeState lifecycle op, incl. the RING/RECURRENT aux
+    # snapshot/restore pair (DESIGN.md §8)
     pat = re.compile(
         r"\b(admit_slot|release_slot|map_prefix|clone_page_cow"
-        r"|retain_pages|release_pages|snapshot_block|restore_block)\s*\(")
+        r"|retain_pages|release_pages|snapshot_block|restore_block"
+        r"|snapshot_aux|restore_aux)\s*\(")
     # the jitted fast path: owned by the engine, and ONLY the engine
     fast_pat = re.compile(
         r"\b(reserve_positions|write_token_kv|fused_decode_scan)\b")
