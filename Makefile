@@ -10,16 +10,24 @@
 # fused_decode_scan) are gated to serve/engine.py, so the horizon code
 # cannot grow a side channel around the reservation protocol (DESIGN.md §7).
 # `make bench-serve-horizon` sweeps the fused decode horizon K on the
-# decode-heavy workload.
+# decode-heavy workload.  `make bench-serve-traffic` drives the engine
+# open-loop (seeded Poisson arrivals over the mixed chat/RAG/agent/
+# summarize profile set) at three offered-load intensities and writes
+# TTFT/TPOT percentiles plus goodput-under-SLO, overlap off vs on, to
+# BENCH_serving.json::traffic (DESIGN.md §9).
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test check-vbi-api bench-serve bench-serve-prefix bench-serve-swap \
-	bench-serve-horizon bench-serve-window bench serve-demo
+.PHONY: test test-slow check-vbi-api bench-serve bench-serve-prefix \
+	bench-serve-swap bench-serve-horizon bench-serve-window \
+	bench-serve-traffic bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+test-slow:
+	$(PYTHON) -m pytest -x -q -m slow
 
 check-vbi-api:
 	@$(PYTHON) -m pytest -q \
@@ -45,6 +53,9 @@ bench-serve-horizon:
 bench-serve-window:
 	$(PYTHON) -m benchmarks.bench_lm_serving --smoke \
 	    --workload long-decode-window
+
+bench-serve-traffic:
+	$(PYTHON) -m benchmarks.bench_traffic --smoke
 
 bench:
 	$(PYTHON) -m benchmarks.run

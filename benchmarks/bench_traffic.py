@@ -1,0 +1,158 @@
+"""Continuous-traffic serving bench (DESIGN.md §9): open-loop arrivals,
+SLO percentiles, and the double-buffered dispatch gain.
+
+Every other serving bench in this directory is closed-loop — all requests
+enqueued at t=0, throughput read at drain — which hides queueing delay
+entirely.  This bench offers the engine a seeded open-loop mixed workload
+(chat / RAG shared-prefix / agent / summarization, serve/traffic.py) at
+three arrival intensities calibrated against the engine's own measured
+closed-loop capacity: under-, at-, and over-subscribed.  For each
+intensity it runs the scheduler with double-buffered dispatch off and on
+over the *same* trace and reports TTFT/TPOT p50/p99, throughput, SLO
+attainment and goodput-under-SLO — plus proof that overlap changed no
+output bits.  SLO targets are derived from the undersubscribed overlap-off run (5x its
+p50 TTFT, 2x its p99 TPOT), so they track the smoke model's actual speed
+instead of hard-coding wall times.
+
+``--smoke`` writes the ``traffic`` section of ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from .bench_lm_serving import write_bench_json
+from .common import emit
+
+
+def bench_traffic(n_requests: int = 32, seed: int = 0,
+                  process: str = "poisson",
+                  intensities: "tuple[float, ...]" = (0.5, 1.0, 1.5),
+                  reps: int = 3) -> "tuple[list[str], dict]":
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.engine import PagedEngine
+    from repro.serve.prefix_cache import PrefixCache
+    from repro.serve.scheduler import Scheduler
+    from repro.serve.traffic import LatencyAccountant, TrafficDriver, make_trace
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    n_slots, page_size = 4, 8
+    eng = PagedEngine(cfg, params, n_pages=33, page_size=page_size,
+                      max_seqs=n_slots, max_pages_per_seq=8,
+                      host_swap_pages=32)
+
+    def closed_loop(trace):
+        sched = Scheduler(eng, prefill_chunk=8, decode_horizon=4,
+                          prefix_cache=PrefixCache(page_size=page_size))
+        for tr in trace:
+            sched.add_request(tr.prompt, tr.max_new, rid=tr.rid)
+        t0 = time.perf_counter()
+        fin = sched.run()
+        dt = time.perf_counter() - t0
+        eng.alloc.release(sched.prefix_cache.evict(
+            sched.prefix_cache.n_pages))
+        return dt, {r.rid: r.out for r in fin}
+
+    def open_loop(trace, overlap):
+        sched = Scheduler(eng, prefill_chunk=8, decode_horizon=4,
+                          prefix_cache=PrefixCache(page_size=page_size),
+                          overlap=overlap)
+        acct = LatencyAccountant()
+        drv = TrafficDriver(sched, trace, accountant=acct)  # wall clock
+        fin = drv.run()
+        eng.alloc.release(sched.prefix_cache.evict(
+            sched.prefix_cache.n_pages))
+        assert eng.pages_in_use == 0
+        return {r.rid: r.out for r in fin}, acct, sched
+
+    # -- calibrate: the engine's own closed-loop capacity -------------------
+    cal = make_trace(cfg.vocab, n_requests, rate=1e9, seed=seed,
+                     process=process)           # rate only shifts arrivals
+    closed_loop(cal)                            # compile/warmup
+    closed_dt, ref_out = closed_loop(cal)
+    base_rate = n_requests / closed_dt          # req/s at full utilization
+    for ov in (False, True):                    # open-loop paths warm too
+        open_loop(make_trace(cfg.vocab, n_requests, rate=base_rate,
+                             seed=seed, process=process), overlap=ov)
+
+    # -- sweep offered load vs capacity, overlap off/on on the same trace ---
+    # wall-clock percentiles on a smoke model are noise-prone: measure each
+    # point `reps` times, keep the fastest run (standard min-of-N timing)
+    runs = {}
+    for x in intensities:
+        rate = base_rate * x
+        trace = make_trace(cfg.vocab, n_requests, rate=rate, seed=seed,
+                           process=process)     # same requests, new clock
+        point = {"offered_rate_req_s": rate, "outputs_match": True}
+        best = {"off": None, "on": None}
+        for _ in range(reps):
+            # interleave off/on so slow thermal/cache drift cannot bias
+            # one mode; keep each mode's fastest rep
+            for tag, ov in (("off", False), ("on", True)):
+                out, acct, sched = open_loop(trace, overlap=ov)
+                point["outputs_match"] &= out == ref_out
+                dur = acct.summary()["duration_s"]
+                if best[tag] is None or dur < best[tag][0]:
+                    best[tag] = (dur, acct, sched)
+        point["off"], point["on"] = best["off"][1:], best["on"][1:]
+        runs[f"{x:g}x"] = point
+
+    # SLOs track the measured smoke-model speed: anchored on the
+    # undersubscribed overlap-off run (generous multiples of its tail,
+    # so sub-ms scheduler jitter does not dominate attainment)
+    anchor = runs[f"{intensities[0]:g}x"]["off"][0].summary()
+    slo_ttft = 5.0 * anchor["ttft_p50"]
+    slo_tpot = 2.0 * anchor["tpot_p99"]
+
+    results = {"n_requests": n_requests, "process": process, "seed": seed,
+               "closed_loop_capacity_req_s": base_rate,
+               "slo_ttft_s": slo_ttft, "slo_tpot_s": slo_tpot,
+               "intensities": {}}
+    lines = []
+    for key, r in runs.items():
+        entry = {"offered_rate_req_s": r["offered_rate_req_s"],
+                 "outputs_match": r["outputs_match"]}
+        for tag in ("off", "on"):
+            acct, sched = r[tag]
+            s = acct.summary(slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+            s["overlap_staged_ticks"] = sched.stats["overlap_staged_ticks"]
+            s["sync_device_ready"] = sched.stats["sync_device_ready"]
+            s["sync_device_wait"] = sched.stats["sync_device_wait"]
+            entry[f"overlap_{tag}"] = s
+        off, on = entry["overlap_off"], entry["overlap_on"]
+        entry["goodput_gain"] = (on["goodput_req_s"]
+                                 / max(off["goodput_req_s"], 1e-9))
+        entry["tpot_p50_gain"] = off["tpot_p50"] / max(on["tpot_p50"], 1e-9)
+        results["intensities"][key] = entry
+        lines.append(emit(
+            f"traffic/{process}_{key}",
+            on["ttft_p50"] * 1e6,
+            f"ttft_p50={on['ttft_p50']*1e3:.1f}ms "
+            f"ttft_p99={on['ttft_p99']*1e3:.1f}ms "
+            f"tpot_p50={on['tpot_p50']*1e3:.1f}ms "
+            f"goodput={on['goodput_req_s']:.2f}req/s "
+            f"(off={off['goodput_req_s']:.2f}) "
+            f"attain={on['slo_attainment']:.2f} "
+            f"match={entry['outputs_match']}"))
+    return lines, results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: writes BENCH_serving.json::traffic")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--process", default="poisson",
+                    choices=("poisson", "bursty"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    n = args.requests if args.smoke or args.requests != 12 else 24
+    lines, results = bench_traffic(n_requests=n, seed=args.seed,
+                                   process=args.process)
+    write_bench_json({"traffic": results})

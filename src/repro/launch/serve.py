@@ -26,6 +26,16 @@ layers on capped RING frames, recurrent layers on constant-size state.
 The prefix cache auto-disables for such stacks (RING/RECURRENT blocks
 are ineligible for sharing).  ``--attn-impl {gather,kernel}`` selects
 the XLA gather path or the Pallas paged-attention kernel.
+
+``--traffic {poisson,bursty}`` switches from the closed-loop batch to
+continuous open-loop serving (DESIGN.md §9): a seeded mixed workload
+(chat / RAG / agent / summarization, serve/traffic.py) arrives at
+``--rate`` requests/s on the wall clock, and the run reports TTFT/TPOT
+percentiles, SLO attainment against ``--slo-ttft``/``--slo-tpot`` and
+goodput-under-SLO instead of aggregate tok/s.  ``--overlap`` enables
+double-buffered dispatch in either mode: the host stages horizon N+1
+(admission, reservation, prefix lookup) while the device still runs
+horizon N — same output bits, fewer stalls.
 """
 from __future__ import annotations
 
@@ -89,10 +99,29 @@ def main(argv=None) -> None:
                          "batched gather, default) or 'kernel' (the Pallas "
                          "paged-attention kernel — lowers for real on TPU, "
                          "interpret mode elsewhere)")
+    ap.add_argument("--traffic", default=None,
+                    choices=("poisson", "bursty"),
+                    help="open-loop continuous traffic (DESIGN.md §9): a "
+                         "seeded mixed workload arrives at --rate req/s on "
+                         "the wall clock; reports TTFT/TPOT percentiles and "
+                         "goodput-under-SLO instead of aggregate tok/s")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="offered load for --traffic, requests per second")
+    ap.add_argument("--slo-ttft", type=float, default=float("inf"),
+                    help="TTFT SLO in seconds (for goodput accounting)")
+    ap.add_argument("--slo-tpot", type=float, default=float("inf"),
+                    help="TPOT SLO in seconds (for goodput accounting)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered dispatch: stage horizon N+1 on "
+                         "the host while the device runs horizon N "
+                         "(bit-exact; works in batch and --traffic modes)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="per-sequence reference path (serve/paged.py)")
     args = ap.parse_args(argv)
+    if args.legacy and (args.traffic or args.overlap):
+        ap.error("--traffic/--overlap need the jitted engine path "
+                 "(drop --legacy)")
 
     cfg = serve_config(args.arch, args.smoke)
     if args.legacy and (cfg.family not in ("dense", "vlm")
@@ -131,13 +160,20 @@ def main(argv=None) -> None:
             cache = None
         sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
                           prefix_cache=cache,
-                          decode_horizon=args.decode_horizon)
-        for p in prompts:
-            sched.add_request(p, max_new=args.max_new)
-        for req in sched.run():
+                          decode_horizon=args.decode_horizon,
+                          overlap=args.overlap)
+        if args.traffic:
+            finished = _run_traffic(cfg, sched, args)
+        else:
+            for p in prompts:
+                sched.add_request(p, max_new=args.max_new)
+            finished = sched.run()
+        for req in finished:
             print(f"[serve] req {req.rid} done: "
                   f"{req.prompt[-4:]} -> {req.out[:8]}...")
-        decoded = args.requests * (len(prompts[0]) + args.max_new)
+        decoded = (sum(len(r.prompt) + len(r.out) for r in finished)
+                   if args.traffic
+                   else args.requests * (len(prompts[0]) + args.max_new))
         print(f"[serve] engine stats {engine.stats} "
               f"allocator stats {engine.alloc.stats} "
               f"sched stats {sched.stats}")
@@ -147,6 +183,33 @@ def main(argv=None) -> None:
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {decoded} token-steps in "
           f"{dt:.1f}s ({decoded / dt:.1f} tok/s)")
+
+
+def _run_traffic(cfg, sched, args):
+    """Open-loop serving on the wall clock: requests arrive whether or not
+    the engine has capacity, and the user-visible numbers are latency
+    percentiles + goodput-under-SLO (DESIGN.md §9)."""
+    from ..serve.traffic import TrafficDriver, make_trace
+    trace = make_trace(cfg.vocab, args.requests, rate=args.rate,
+                       seed=args.seed, process=args.traffic)
+    mix = {}
+    for tr in trace:
+        mix[tr.profile] = mix.get(tr.profile, 0) + 1
+    print(f"[serve] open-loop {args.traffic} traffic: {args.requests} "
+          f"requests @ {args.rate:g} req/s, mix {mix}, "
+          f"overlap={'on' if args.overlap else 'off'}")
+    drv = TrafficDriver(sched, trace)                 # wall clock
+    finished = drv.run()
+    s = drv.acct.summary(slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
+    print(f"[serve] ttft p50={s['ttft_p50']*1e3:.1f}ms "
+          f"p99={s['ttft_p99']*1e3:.1f}ms | "
+          f"tpot p50={s['tpot_p50']*1e3:.1f}ms "
+          f"p99={s['tpot_p99']*1e3:.1f}ms")
+    print(f"[serve] throughput={s['throughput_req_s']:.2f}req/s "
+          f"({s['throughput_tok_s']:.1f}tok/s) "
+          f"slo_attainment={s['slo_attainment']:.2f} "
+          f"goodput={s['goodput_req_s']:.2f}req/s")
+    return finished
 
 
 def _run_legacy(cfg, params, prompts, args) -> int:

@@ -2,7 +2,11 @@ from .engine import PagedEngine, batched_paged_attention
 from .prefix_cache import PrefixCache, PrefixMatch
 from .scheduler import Request, Scheduler
 from .step import make_decode_step, make_prefill_step
+from .traffic import (LatencyAccountant, ScenarioProfile, TimedRequest,
+                      TrafficDriver, VirtualClock, WallClock, make_trace)
 
 __all__ = ["make_prefill_step", "make_decode_step", "PagedEngine",
            "batched_paged_attention", "Scheduler", "Request",
-           "PrefixCache", "PrefixMatch"]
+           "PrefixCache", "PrefixMatch", "ScenarioProfile", "TimedRequest",
+           "make_trace", "LatencyAccountant", "TrafficDriver",
+           "VirtualClock", "WallClock"]

@@ -19,7 +19,14 @@ the data-centric rewrite (DESIGN.md §5):
     per-slot stopping (steps_left / EOS) on device — so the host syncs a
     ``[K, S]`` token block once per horizon instead of once per token;
   * chunked prefill scans whole prompt chunks inside one dispatch, with
-    the next-token argmax inside the jit so only [S] int32 ever crosses.
+    the next-token argmax inside the jit so only [S] int32 ever crosses;
+  * every fast-path entry point is *asynchronous*: ``decode_many`` /
+    ``prefill_chunk`` return device arrays without blocking, so a caller
+    may defer the horizon-N sync and stage horizon N+1 (admission, span
+    reservation, prefix lookup, the next prefill dispatch) while the
+    device is still running — the double-buffered scheduler (DESIGN.md
+    §9) is built on exactly this contract, with ``block_ready`` as the
+    non-blocking probe for whether a deferred sync would stall.
 
 Heterogeneous layer stacks (DESIGN.md §8): the engine partitions
 ``cfg.layer_kinds()`` into property-typed groups and gives each its own
@@ -461,6 +468,14 @@ class PagedEngine:
         self.stats["decode_steps"] += k
         self.stats["decode_dispatches"] += 1
         return block
+
+    @staticmethod
+    def block_ready(x: jax.Array) -> bool:
+        """Non-blocking probe: has the device finished computing ``x``?
+        The overlap scheduler reads this right before a deferred horizon
+        sync — a False means the host failed to hide the whole horizon
+        behind staging work (counted in ``Scheduler.stats``)."""
+        return x.is_ready()
 
     def prefill_chunk(self, tokens: jax.Array, n_tokens: jax.Array
                       ) -> jax.Array:

@@ -45,7 +45,23 @@ Policies implemented:
     host tier (device pages copied out and freed; resume restores them with
     one scatter — exact logits, no recompute); otherwise its fed prefix is
     saved into the prefix cache and its pages discarded, and re-admission
-    restores from the cache (or re-prefills) instead.
+    restores from the cache (or re-prefills) instead;
+  * **double-buffered dispatch** (``overlap=True``, DESIGN.md §9) — the
+    horizon-N token block is left *in flight* at the end of the tick and
+    synced at the start of the next, so admission (slot + span
+    reservation, prefix-cache lookup, swap-in) and the next prefill
+    chunk's staging/dispatch all happen while the device is still running
+    horizon N.  Staging only ever *charges* the allocator's host mirror
+    (early reservation is conservative by construction) and only touches
+    slots outside the in-flight decode set, so the commit/unreserve
+    reconciliation at the deferred sync is exactly the non-overlapped one
+    — per-request outputs are bit-identical with overlap on or off, and
+    the device pipeline never sees a host gap between horizons.
+
+Streaming: ``on_tokens(req, n_new)`` fires whenever host-visible tokens
+are appended to a request (first token at prefill finish, ≤ K tokens at
+each horizon sync) and ``on_finish(req)`` at eviction — the hooks the
+open-loop traffic harness (serve/traffic.py) timestamps for TTFT/TPOT.
 """
 from __future__ import annotations
 
@@ -97,7 +113,8 @@ class Scheduler:
     def __init__(self, engine: PagedEngine, prefill_chunk: int = 8,
                  prefix_cache: Optional[PrefixCache] = None,
                  block_props: VBProps = DEFAULT_BLOCK_PROPS,
-                 decode_horizon: int = 1):
+                 decode_horizon: int = 1, overlap: bool = False,
+                 on_tokens=None, on_finish=None):
         if prefix_cache is not None:
             assert prefix_cache.page_size == engine.page_size
             # RING frames are position-recycled and RECURRENT state is not
@@ -115,11 +132,18 @@ class Scheduler:
         self.prefix_cache = prefix_cache
         self.block_props = block_props
         self.decode_horizon = decode_horizon
+        self.overlap = overlap
+        self.on_tokens = on_tokens        # streaming hooks (serve/traffic.py)
+        self.on_finish = on_finish
         self.queue: Deque[Request] = deque()
         self.slots: Dict[int, _SlotState] = {}
         self.finished: List[Request] = []
         self._next_rid = 0
         self._admit_seq = 0
+        # the in-flight horizon (overlap mode): the un-synced [K, S] device
+        # token block plus the slot ids and per-slot step budgets it was
+        # dispatched with, reconciled at the NEXT tick's sync point
+        self._pending: Optional[tuple] = None
         # staging buffers, allocated once and reused every tick.  They MUST
         # cross the jit boundary via jnp.array (copy=True): jnp.asarray is
         # zero-copy on CPU when alignment permits, which would alias the
@@ -136,7 +160,9 @@ class Scheduler:
                       "prefix_tokens_reused": 0, "cache_evicted_pages": 0,
                       "swap_outs": 0, "swap_ins": 0, "prefill_tokens": 0,
                       "host_syncs": 0, "prefill_host_reads": 0,
-                      "prefill_reads_skipped": 0, "horizon_truncations": 0}
+                      "prefill_reads_skipped": 0, "horizon_truncations": 0,
+                      "overlap_staged_ticks": 0, "sync_device_ready": 0,
+                      "sync_device_wait": 0}
 
     # -- request intake ------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int,
@@ -319,6 +345,8 @@ class Scheduler:
         self._unpin(st)
         self.alloc.free(st.block)
         self.finished.append(st.req)
+        if self.on_finish is not None:
+            self.on_finish(st.req)
 
     def _preempt_one(self) -> bool:
         """Release the youngest running non-PINNED slot back to the queue.
@@ -408,89 +436,178 @@ class Scheduler:
         return k, wants
 
     # -- one scheduler tick ---------------------------------------------------
-    def step(self) -> List[Request]:
-        """Admit, prefill one chunk, decode one horizon (``decode_horizon``
-        tokens per decoding slot, one host sync); returns requests that
-        finished this tick."""
-        self.stats["steps"] += 1
-        self._admit()
-        done_before = len(self.finished)
-
-        # 1. chunked prefill for slots still consuming their prompt
+    def _prefill_stage(self) -> Optional[tuple]:
+        """Host half of a chunked-prefill step: pick the slots still
+        consuming their prompt, charge the allocator mirror, fill the
+        pinned numpy staging buffers.  Touches NO device state or jax
+        API, so in overlap mode it runs entirely under the in-flight
+        decode horizon — on backends where transfers and dependent
+        dispatches block while the device is busy (the CPU client), this
+        host-only half is exactly the part that can hide."""
         pre = {s: st for s, st in self.slots.items() if st.prefilling}
-        if pre:
-            C = self.prefill_chunk
-            toks, counts = self._pre_toks, self._pre_counts
-            toks.fill(0)
-            counts.fill(0)
-            for s, st in pre.items():
-                seq = st.req.tokens
-                n = min(C, st.prefill_len - st.fed)
-                self.alloc.reserve(st.block, st.fed + n)
-                toks[s, :n] = seq[st.fed:st.fed + n]
-                counts[s] = n
-            nxt_dev = self.engine.prefill_chunk(jnp.array(toks),
-                                                jnp.array(counts))
-            self.stats["prefill_tokens"] += int(counts.sum())
-            # argmax happened inside the dispatch; read the [S] int32 back
-            # only if some slot finished its prompt this chunk
-            finishing = [s for s, st in pre.items()
-                         if st.fed + counts[s] >= st.prefill_len]
-            nxt = None
-            if finishing:
-                nxt = np.asarray(nxt_dev)
-                self.stats["host_syncs"] += 1
-                self.stats["prefill_host_reads"] += 1
-            else:
-                self.stats["prefill_reads_skipped"] += 1
-            for s, st in pre.items():
-                st.fed += int(counts[s])
-                self.alloc.commit(st.block, st.fed)
-                if not st.prefilling:          # prompt done → first token
-                    if not st.inserted:        # share the prompt's KV pages
-                        self._cache_insert(st)
-                        st.inserted = True
-                    st.req.out.append(int(nxt[s]))
+        if not pre:
+            return None
+        C = self.prefill_chunk
+        toks, counts = self._pre_toks, self._pre_counts
+        toks.fill(0)
+        counts.fill(0)
+        for s, st in pre.items():
+            seq = st.req.tokens
+            n = min(C, st.prefill_len - st.fed)
+            self.alloc.reserve(st.block, st.fed + n)
+            toks[s, :n] = seq[st.fed:st.fed + n]
+            counts[s] = n
+        return pre, counts.copy()
 
-        # 2. one fused decode horizon for slots past their prompt
+    def _prefill_launch(self, staged: Optional[tuple]) -> Optional[tuple]:
+        """Device half: transfer the staged buffers and dispatch the
+        chunk.  In overlap mode this runs right after the deferred sync —
+        the device queue is drained, so the transfer never blocks."""
+        if staged is None:
+            return None
+        pre, counts = staged
+        nxt_dev = self.engine.prefill_chunk(jnp.array(self._pre_toks),
+                                            jnp.array(self._pre_counts))
+        self.stats["prefill_tokens"] += int(counts.sum())
+        return pre, counts, nxt_dev
+
+    def _prefill_dispatch(self) -> Optional[tuple]:
+        """Stage + dispatch one chunked-prefill step (the non-overlapped
+        path: both halves back to back)."""
+        return self._prefill_launch(self._prefill_stage())
+
+    def _prefill_finish(self, handle: Optional[tuple]) -> None:
+        """Reconcile the chunk dispatched by :meth:`_prefill_dispatch`:
+        the argmax happened inside the jit, so the [S] int32 is read back
+        only if some slot finished its prompt this chunk."""
+        if handle is None:
+            return
+        pre, counts, nxt_dev = handle
+        finishing = [s for s, st in pre.items()
+                     if st.fed + counts[s] >= st.prefill_len]
+        nxt = None
+        if finishing:
+            nxt = np.asarray(nxt_dev)
+            self.stats["host_syncs"] += 1
+            self.stats["prefill_host_reads"] += 1
+        else:
+            self.stats["prefill_reads_skipped"] += 1
+        for s, st in pre.items():
+            st.fed += int(counts[s])
+            self.alloc.commit(st.block, st.fed)
+            if not st.prefilling:          # prompt done → first token
+                if not st.inserted:        # share the prompt's KV pages
+                    self._cache_insert(st)
+                    st.inserted = True
+                st.req.out.append(int(nxt[s]))
+                if self.on_tokens is not None:
+                    self.on_tokens(st.req, 1)
+
+    def _decode_dispatch(self, pre_ids) -> None:
+        """Plan + dispatch one fused decode horizon for slots past their
+        prompt, leaving the [K, S] token block in flight (``_pending``).
+        The worst-case span is reserved through the allocator before the
+        dispatch, so the reconciliation can be deferred a whole tick
+        without the device free stack ever being oversubscribed."""
         dec_ids = [s for s, st in self.slots.items()
-                   if not st.prefilling and s not in pre]
-        k, wants = 1, {}
+                   if not st.prefilling and s not in pre_ids]
+        wants = {}
         if dec_ids:
             k, wants = self._plan_horizon(dec_ids)
             dec_ids = [s for s in dec_ids if s in self.slots]
-        if dec_ids:
-            toks, mask = self._dec_toks, self._dec_mask
-            steps = self._dec_steps
-            toks.fill(0)
-            mask.fill(False)
-            steps.fill(0)
-            for s in dec_ids:
-                st = self.slots[s]
-                toks[s] = st.req.tokens[-1]
-                mask[s] = True
-                steps[s] = wants[s]     # exactly the span reserved above
-            block = self.engine.decode_many(
-                jnp.array(toks), jnp.array(mask), jnp.array(steps), k)
-            # THE one host sync of the horizon: a [K, S] int32 token block
-            block = np.asarray(block)
-            self.stats["host_syncs"] += 1
-            for s in dec_ids:
-                st = self.slots[s]
-                col = block[:, s]
-                produced = col[col >= 0]          # -1 = masked lane
-                st.fed += len(produced)
-                self.alloc.commit(st.block, st.fed)
-                if len(produced) < steps[s]:      # stopped on device (EOS):
-                    self.alloc.unreserve(st.block, st.fed)   # return surplus
-                st.req.out.extend(int(t) for t in produced)
+        if not dec_ids:
+            return
+        toks, mask = self._dec_toks, self._dec_mask
+        steps = self._dec_steps
+        toks.fill(0)
+        mask.fill(False)
+        steps.fill(0)
+        for s in dec_ids:
+            st = self.slots[s]
+            toks[s] = st.req.tokens[-1]
+            mask[s] = True
+            steps[s] = wants[s]         # exactly the span reserved above
+        block = self.engine.decode_many(
+            jnp.array(toks), jnp.array(mask), jnp.array(steps), k)
+        self._pending = (block, dec_ids, wants)
 
-        # 3. eviction (max_new reached, or the device emitted EOS)
+    def _decode_reconcile(self) -> None:
+        """THE one host sync of the horizon: pull the [K, S] int32 token
+        block and reconcile commits/unreserves from it.  In overlap mode
+        this runs a tick *after* the dispatch — the slots it touches are
+        exactly the dispatched ``dec_ids`` (admission between dispatch and
+        sync only ever fills OTHER slots), so the arithmetic is identical
+        to the non-overlapped path."""
+        if self._pending is None:
+            return
+        block_dev, dec_ids, wants = self._pending
+        self._pending = None
+        self.stats["sync_device_ready" if self.engine.block_ready(block_dev)
+                   else "sync_device_wait"] += 1
+        block = np.asarray(block_dev)
+        self.stats["host_syncs"] += 1
+        for s in dec_ids:
+            st = self.slots[s]
+            col = block[:, s]
+            produced = col[col >= 0]              # -1 = masked lane
+            st.fed += len(produced)
+            self.alloc.commit(st.block, st.fed)
+            if len(produced) < wants[s]:          # stopped on device (EOS):
+                self.alloc.unreserve(st.block, st.fed)   # return surplus
+            st.req.out.extend(int(t) for t in produced)
+            if self.on_tokens is not None and len(produced):
+                self.on_tokens(st.req, len(produced))
+
+    def _evict_finished(self) -> None:
+        """Eviction: max_new reached, or the device emitted EOS."""
         eos = self.engine.eos_id
         for s in [s for s, st in self.slots.items()
                   if len(st.req.out) >= st.req.max_new
                   or (eos >= 0 and st.req.out and st.req.out[-1] == eos)]:
             self._evict(s)
+
+    def step(self) -> List[Request]:
+        """Admit, prefill one chunk, decode one horizon (``decode_horizon``
+        tokens per decoding slot, one host sync); returns requests that
+        finished this tick.
+
+        ``overlap=False`` (default): dispatch → sync → reconcile within
+        the tick — the device idles while the host stages the next tick.
+        ``overlap=True``: the sync of horizon N is deferred to the START
+        of tick N+1, after admission and the prefill dispatch — the host
+        stages horizon N+1 while the device runs horizon N (DESIGN.md §9).
+        Per-request outputs are bit-identical either way; only *when* a
+        queued request is admitted can shift by one tick."""
+        self.stats["steps"] += 1
+        done_before = len(self.finished)
+        if self.overlap and self._pending is not None:
+            self.stats["overlap_staged_ticks"] += 1
+            self._admit()                      # staged under horizon N ...
+            staged = self._prefill_stage()     # ... host half only
+            self._decode_reconcile()           # horizon N's deferred sync
+            handle = self._prefill_launch(staged)   # device queue drained
+        else:
+            self._admit()
+            handle = self._prefill_dispatch()
+        self._prefill_finish(handle)
+        if self.overlap:
+            # evict BEFORE dispatching horizon N+1: a slot finished at the
+            # deferred sync must not ride into the next in-flight horizon
+            self._evict_finished()
+            if self.queue:
+                # refill pass: the staged _admit ran before the deferred
+                # sync could free any slot, so without this a finishing
+                # request leaves its slot idle a full extra tick at high
+                # arrival rates.  No horizon is in flight here (reconcile
+                # already ran), so this is plain non-overlapped admission;
+                # the refilled slot joins the next tick's combined prefill
+                # chunk rather than paying a dispatch of its own.
+                self._admit()
+        pre_ids = handle[0].keys() if handle else ()
+        self._decode_dispatch(pre_ids)
+        if not self.overlap:
+            self._decode_reconcile()
+            self._evict_finished()
         return self.finished[done_before:]
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
@@ -517,4 +634,5 @@ class Scheduler:
                 f"run() exhausted {max_steps} steps with "
                 f"{len(self.queue)} queued and {len(self.slots)} running "
                 f"requests still unfinished")
+        assert self._pending is None    # a drained loop has nothing in flight
         return self.finished

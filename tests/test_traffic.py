@@ -1,0 +1,305 @@
+"""Continuous-traffic serving (DESIGN.md §9): deterministic open-loop
+replay, the latency accountant, and double-buffered dispatch.
+
+  * the latency accountant reproduces a hand-computed trace exactly —
+    TTFT/TPOT percentiles (linear interpolation, pinned), throughput,
+    SLO attainment and goodput-under-SLO;
+  * property sweep: goodput never exceeds throughput, p50 never exceeds
+    p99, attainment stays in [0, 1] — over random traces;
+  * seeded trace generation is bit-reproducible, and the open-loop
+    virtual-clock replay produces outputs bit-identical to the
+    closed-loop run of the same requests, across a uniform GQA stack and
+    the hetero acceptance stacks (gemma3 local/global, recurrentgemma);
+  * double-buffered dispatch (``overlap=True``) changes no output bits —
+    with and without preemption/swap pressure — and drains the pool and
+    the host swap tier completely;
+  * a ``slow``-marked denser sweep crosses arrival processes × rates ×
+    overlap (excluded from tier-1 via ``-m "not slow"``).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                           # pragma: no cover
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.launch.serve import serve_config
+from repro.models.model import init_params
+from repro.serve.engine import PagedEngine
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import Scheduler
+from repro.serve.traffic import (LatencyAccountant, TrafficDriver,
+                                 VirtualClock, bursty_arrivals, make_trace,
+                                 percentile, poisson_arrivals)
+
+
+# --------------------------------------------------------------------------
+# latency accountant: hand-computed trace
+# --------------------------------------------------------------------------
+def test_accountant_hand_computed_trace():
+    """Four requests with hand-derived timings; every reported number is
+    checked against arithmetic done on paper, so the SLO math has exactly
+    one authoritative definition."""
+    a = LatencyAccountant()
+    # r0: arrives 0.0, tokens at 0.2/0.4/0.6/0.8/1.0  -> ttft .2, tpot .2
+    a.on_arrival(0, 0.0)
+    for t in (0.2, 0.4, 0.6, 0.8, 1.0):
+        a.on_tokens(0, t)
+    a.on_finish(0, 1.0)
+    # r1: arrives 1.0, single token at 1.1            -> ttft .1, tpot 0
+    a.on_arrival(1, 1.0)
+    a.on_tokens(1, 1.1)
+    a.on_finish(1, 1.2)
+    # r2: arrives 2.0, queued; burst of 2 at 3.0 then one at 3.4
+    #                                                 -> ttft 1.0, tpot .2
+    a.on_arrival(2, 2.0)
+    a.on_tokens(2, 3.0, n=2)
+    a.on_tokens(2, 3.4)
+    a.on_finish(2, 3.4)
+    # r3: arrives 3.0, tokens at 3.5 and 4.0          -> ttft .5, tpot .5
+    a.on_arrival(3, 3.0)
+    a.on_tokens(3, 3.5)
+    a.on_tokens(3, 4.0)
+    a.on_finish(3, 4.0)
+
+    s = a.summary(slo_ttft=0.5, slo_tpot=0.3)
+    assert s["n_finished"] == 4
+    assert s["duration_s"] == pytest.approx(4.0)       # first arrival->last finish
+    assert s["throughput_req_s"] == pytest.approx(1.0)
+    assert s["throughput_tok_s"] == pytest.approx(11 / 4.0)
+    # ttfts sorted [.1, .2, .5, 1.0]; tpots sorted [0, .2, .2, .5]
+    assert s["ttft_p50"] == pytest.approx(0.35)
+    assert s["ttft_p99"] == pytest.approx(0.985)
+    assert s["ttft_mean"] == pytest.approx(0.45)
+    assert s["tpot_p50"] == pytest.approx(0.2)
+    assert s["tpot_p99"] == pytest.approx(0.491)
+    # r0 and r1 meet both SLOs; r2 misses TTFT, r3 misses TPOT
+    assert s["slo_attainment"] == pytest.approx(0.5)
+    assert s["goodput_req_s"] == pytest.approx(0.5)
+
+
+def test_accountant_edge_cases():
+    a = LatencyAccountant()
+    assert a.summary() == {"n_finished": 0}            # nothing finished
+    a.on_arrival(0, 0.0)
+    a.on_tokens(0, 0.5)
+    a.on_tokens(0, 0.7, n=0)                           # no-op burst
+    a.on_finish(0, 0.7)
+    s = a.summary()
+    assert s["n_finished"] == 1 and s["tpot_p99"] == 0.0
+    assert s["slo_attainment"] == 1.0                  # inf SLOs: all good
+    # percentile is pinned to linear interpolation on the sorted sample
+    assert percentile([3.0], 99) == 3.0
+    assert percentile([1.0, 2.0], 50) == pytest.approx(1.5)
+    assert math.isnan(percentile([], 50))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 40))
+def test_accountant_properties(seed, n):
+    """Invariants over random traces: goodput <= throughput, p50 <= p99
+    for both metrics, attainment in [0, 1], tpot of 1-token replies is 0."""
+    rng = np.random.default_rng(seed)
+    a = LatencyAccountant()
+    for rid in range(n):
+        t = float(rng.uniform(0, 50))
+        a.on_arrival(rid, t)
+        if rng.random() < 0.1:
+            continue                                   # never finishes
+        t += float(rng.exponential(1.0))
+        k = int(rng.integers(1, 8))
+        for _ in range(k):
+            a.on_tokens(rid, t)
+            t += float(rng.exponential(0.3))
+        a.on_finish(rid, t)
+    s = a.summary(slo_ttft=float(rng.uniform(0.1, 3)),
+                  slo_tpot=float(rng.uniform(0.05, 1)))
+    if s["n_finished"] == 0:
+        return
+    assert s["goodput_req_s"] <= s["throughput_req_s"] + 1e-12
+    assert s["ttft_p50"] <= s["ttft_p99"] + 1e-12
+    assert s["tpot_p50"] <= s["tpot_p99"] + 1e-12
+    assert 0.0 <= s["slo_attainment"] <= 1.0
+
+
+# --------------------------------------------------------------------------
+# trace generation: determinism + process shape
+# --------------------------------------------------------------------------
+def test_make_trace_deterministic_and_mixed():
+    t1 = make_trace(vocab=256, n_requests=64, rate=2.0, seed=7)
+    t2 = make_trace(vocab=256, n_requests=64, rate=2.0, seed=7)
+    assert t1 == t2                                    # frozen dataclasses
+    t3 = make_trace(vocab=256, n_requests=64, rate=2.0, seed=8)
+    assert t1 != t3
+    names = {r.profile for r in t1}
+    assert names == {"chat", "rag", "agent", "summarize"}
+    arr = [r.t_arrival for r in t1]
+    assert arr == sorted(arr) and arr[0] > 0
+    # every RAG request of a trace shares the same system prefix
+    rags = [r for r in t1 if r.profile == "rag"]
+    head = rags[0].prompt[:16]
+    assert all(r.prompt[:16] == head for r in rags)
+
+
+def test_arrival_processes_match_offered_load():
+    """Bursty arrivals keep the long-run rate of the Poisson process they
+    replace (same offered load, spikier shape)."""
+    rng = np.random.default_rng(0)
+    n, rate = 4000, 2.0
+    tp = poisson_arrivals(n, rate, np.random.default_rng(0))
+    tb = bursty_arrivals(n, rate, rng, burst_mean=4.0)
+    assert np.all(np.diff(tp) >= 0) and np.all(np.diff(tb) >= 0)
+    assert n / tp[-1] == pytest.approx(rate, rel=0.15)
+    assert n / tb[-1] == pytest.approx(rate, rel=0.15)
+    # spikier: bursty has many simultaneous arrivals, poisson has none
+    assert np.sum(np.diff(tb) == 0) > n / 2
+    assert np.sum(np.diff(tp) == 0) == 0
+
+
+# --------------------------------------------------------------------------
+# open-loop replay == closed-loop outputs, bit for bit
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stacks():
+    out = {}
+    for i, arch in enumerate(("qwen3-0.6b", "gemma3-12b",
+                              "recurrentgemma-9b")):
+        cfg = serve_config(arch)
+        out[arch] = (cfg, init_params(cfg, jax.random.key(i)))
+    return out
+
+
+def _mk_sched(cfg, params, overlap=False, cache=False, **eng_kw):
+    kw = dict(n_pages=33, page_size=8, max_seqs=2, max_pages_per_seq=8)
+    kw.update(eng_kw)
+    eng = PagedEngine(cfg, params, **kw)
+    pc = PrefixCache(page_size=kw["page_size"]) if cache else None
+    sched = Scheduler(eng, prefill_chunk=4, decode_horizon=4,
+                      prefix_cache=pc, overlap=overlap)
+    return eng, sched, pc
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma3-12b",
+                                  "recurrentgemma-9b"])
+def test_open_loop_replay_matches_closed_loop(stacks, arch):
+    """The replay acceptance: a seeded open-loop run on the virtual clock
+    produces per-request outputs bit-identical to the closed-loop run of
+    the same requests — arrival timing shifts admission order, never
+    token identity (greedy decode is schedule-invariant)."""
+    cfg, params = stacks[arch]
+    trace = make_trace(cfg.vocab, n_requests=8, rate=0.5, seed=3,
+                       max_prompt=12, max_new_cap=8)
+    # closed loop: everything enqueued at t=0
+    _, sched_c, _ = _mk_sched(cfg, params)
+    for tr in trace:
+        sched_c.add_request(tr.prompt, tr.max_new, rid=tr.rid)
+    ref = {r.rid: r.out for r in sched_c.run()}
+
+    # open loop: arrivals pumped on the virtual clock
+    eng, sched_o, _ = _mk_sched(cfg, params)
+    drv = TrafficDriver(sched_o, trace, clock=VirtualClock(dt=1.0))
+    out = {r.rid: r.out for r in drv.run()}
+    assert out == ref, f"{arch}: open-loop replay diverged"
+    assert eng.pages_in_use == 0
+    s = drv.acct.summary()
+    assert s["n_finished"] == len(trace)
+    # every request decoded: token counts match the scheduler's truth
+    assert all(drv.acct.reqs[r.rid].n_tokens == len(ref[r.rid])
+               for r in trace)
+
+
+def test_open_loop_replay_is_reproducible(stacks):
+    """Two open-loop runs of the same seeded trace agree on outputs AND on
+    every accountant timestamp — the virtual clock makes latency numbers
+    themselves deterministic, not just token ids."""
+    cfg, params = stacks["qwen3-0.6b"]
+    trace = make_trace(cfg.vocab, n_requests=10, rate=1.0, seed=11,
+                       max_prompt=12, max_new_cap=8)
+
+    def once():
+        _, sched, _ = _mk_sched(cfg, params, cache=True)
+        drv = TrafficDriver(sched, trace, clock=VirtualClock(dt=0.25))
+        fin = drv.run()
+        return ({r.rid: r.out for r in fin},
+                drv.acct.summary(slo_ttft=5.0, slo_tpot=2.0))
+
+    (out1, sum1), (out2, sum2) = once(), once()
+    assert out1 == out2 and sum1 == sum2
+    assert sum1["slo_attainment"] > 0                 # SLOs actually bind
+
+
+# --------------------------------------------------------------------------
+# double-buffered dispatch: bit-exact, on/off, incl. under pressure
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma3-12b"])
+def test_overlap_on_off_equivalence(stacks, arch):
+    cfg, params = stacks[arch]
+    trace = make_trace(cfg.vocab, n_requests=8, rate=1.0, seed=5,
+                       max_prompt=12, max_new_cap=8)
+    outs, scheds = {}, {}
+    for ov in (False, True):
+        eng, sched, _ = _mk_sched(cfg, params, overlap=ov)
+        drv = TrafficDriver(sched, trace, clock=VirtualClock())
+        outs[ov] = {r.rid: r.out for r in drv.run()}
+        scheds[ov] = sched
+        assert eng.pages_in_use == 0                  # drained either way
+    assert outs[True] == outs[False]
+    assert scheds[True].stats["overlap_staged_ticks"] > 0
+    assert scheds[False].stats["overlap_staged_ticks"] == 0
+
+
+def test_overlap_exact_under_preemption_and_swap(stacks):
+    """The hard case: a pool small enough to force preemption to the host
+    swap tier.  Overlap staging must stay bit-exact while reservations,
+    swap-outs and re-admissions race the in-flight horizon — and both the
+    pool and the swap tier must drain to empty."""
+    cfg, params = stacks["qwen3-0.6b"]
+    trace = make_trace(cfg.vocab, n_requests=8, rate=2.0, seed=9,
+                       max_prompt=8, max_new_cap=12)
+    # 8 pool pages @ ps=4: two requests admit on their prompt+horizon
+    # budget (4 pages each) but cannot both run to their 20-token
+    # lifetime (5 pages each) — preemption mid-decode is guaranteed
+    tight = dict(n_pages=9, page_size=4, max_seqs=4, max_pages_per_seq=5,
+                 host_swap_pages=16)
+    outs = {}
+    for ov in (False, True):
+        eng, sched, _ = _mk_sched(cfg, params, overlap=ov, **tight)
+        drv = TrafficDriver(sched, trace, clock=VirtualClock())
+        outs[ov] = {r.rid: r.out for r in drv.run()}
+        if ov:
+            assert sched.stats["overlap_staged_ticks"] > 0
+        assert sched.stats["preemptions"] >= 1        # pressure was real
+        assert sched.stats["swap_ins"] >= 1
+        assert eng.pages_in_use == 0
+        assert eng.alloc.swap.used_pages == 0         # tier drained
+        assert eng.free_pages == eng.alloc.free_pages
+    assert outs[True] == outs[False]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("process", ["poisson", "bursty"])
+def test_traffic_sweep_slow(stacks, process):
+    """Denser sweep (excluded from tier-1): arrival processes × rates ×
+    overlap, with the prefix cache on — outputs must agree pairwise at
+    every point and the accountant must produce finite percentiles."""
+    cfg, params = stacks["qwen3-0.6b"]
+    for rate in (0.5, 2.0):
+        trace = make_trace(cfg.vocab, n_requests=16, rate=rate, seed=21,
+                           process=process, max_prompt=12, max_new_cap=8)
+        ref = None
+        for ov in (False, True):
+            eng, sched, pc = _mk_sched(cfg, params, overlap=ov, cache=True)
+            drv = TrafficDriver(sched, trace, clock=VirtualClock())
+            out = {r.rid: r.out for r in drv.run()}
+            if ref is None:
+                ref = out
+            assert out == ref, f"{process} rate={rate} overlap={ov}"
+            eng.alloc.release(pc.evict(pc.n_pages))
+            assert eng.pages_in_use == 0
+            s = drv.acct.summary(slo_ttft=8.0, slo_tpot=4.0)
+            assert s["n_finished"] == 16
+            assert np.isfinite(s["ttft_p99"]) and np.isfinite(s["tpot_p99"])

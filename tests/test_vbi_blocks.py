@@ -122,29 +122,36 @@ def test_refcount_conservation_random_traces(flavor):
         blocks = []                  # every block ever allocated
         ledger = []                  # pages on the cache ledger
         pinned_by = {}               # ledger page -> mapping live blocks
+        staged = {}                  # bid -> (blk, n0, k): in-flight horizon
         for _ in range(70):
+            # the overlap protocol (DESIGN.md §9): a block whose horizon is
+            # staged/in flight is untouched by every other lifecycle op
+            # until its deferred reconcile ('arrive') — exactly the
+            # scheduler's invariant, so the quiet set excludes it
             resident = [b for b in blocks if b.status == "resident"]
+            quiet = [b for b in resident if b.bid not in staged]
             swapped = [b for b in blocks if b.status == "swapped"]
             free_slots = [s for s in range(max_seqs)
                           if s not in al.blocks]
             op = rng.choice(["alloc", "feed", "horizon_feed", "cache_insert",
                              "map_shared", "cow", "release_cache",
-                             "swap_out", "swap_in", "free", "double_free"])
+                             "swap_out", "swap_in", "free", "double_free",
+                             "stage_ahead", "arrive"])
             if op == "alloc" and free_slots:
                 blocks.append(al.alloc(int(rng.choice(free_slots))))
-            elif op == "feed" and resident:
-                blk = resident[rng.integers(len(resident))]
+            elif op == "feed" and quiet:
+                blk = quiet[rng.integers(len(quiet))]
                 n = int(rng.integers(1, ps * 2 + 1))
                 n = min(n, rowP * ps - blk.n_tokens)
                 need = (al.pages_for(blk.n_tokens + n) - blk.shared_pages
                         - blk.reserved_pages)
                 if n > 0 and need <= al.free_pages:
                     _feed(pool, al, blk, n)
-            elif op == "horizon_feed" and resident:
+            elif op == "horizon_feed" and quiet:
                 # the fused-horizon protocol (DESIGN.md §7): span-reserve K
                 # tokens up front, advance j ≤ K (device-side early stop),
                 # reconcile at the boundary with commit + unreserve
-                blk = resident[rng.integers(len(resident))]
+                blk = quiet[rng.integers(len(quiet))]
                 k = min(int(rng.integers(1, ps * 2 + 1)),
                         rowP * ps - blk.n_tokens)
                 need = (al.pages_for(blk.n_tokens + k) - blk.shared_pages
@@ -161,9 +168,9 @@ def test_refcount_conservation_random_traces(flavor):
                             has_full=pool.has_full)
                     al.commit(blk, n0 + j)
                     al.unreserve(blk, n0 + j)
-            elif op == "cache_insert" and resident and shareable:
+            elif op == "cache_insert" and quiet and shareable:
                 # scheduler protocol: move owned full pages to the ledger
-                blk = resident[rng.integers(len(resident))]
+                blk = quiet[rng.integers(len(quiet))]
                 n_full = blk.n_tokens // ps
                 row = al.page_row(blk, n_full)
                 new = [p for p in row[blk.shared_pages:]
@@ -201,8 +208,8 @@ def test_refcount_conservation_random_traces(flavor):
                     page = int(rng.choice(frees))
                     al.release([page])
                     ledger.remove(page)
-            elif op == "swap_out" and resident:
-                blk = resident[rng.integers(len(resident))]
+            elif op == "swap_out" and quiet:
+                blk = quiet[rng.integers(len(quiet))]
                 if al.swap_out(blk):
                     for bids in pinned_by.values():
                         bids.discard(blk.bid)
@@ -210,8 +217,36 @@ def test_refcount_conservation_random_traces(flavor):
                 blk = swapped[rng.integers(len(swapped))]
                 if al.pages_for(blk.n_tokens) <= al.free_pages:
                     al.swap_in(blk, int(rng.choice(free_slots)))
-            elif op in ("free", "double_free") and (resident or swapped):
-                pick = resident + swapped
+            elif op == "stage_ahead" and quiet:
+                # overlap staging (DESIGN.md §9): the worst-case K-token
+                # span is charged to the mirror while the (simulated)
+                # device still runs the previous horizon — the reservation
+                # stays outstanding across arbitrarily many other ops
+                blk = quiet[rng.integers(len(quiet))]
+                k = min(int(rng.integers(1, ps * 2 + 1)),
+                        rowP * ps - blk.n_tokens)
+                need = (al.pages_for(blk.n_tokens + k) - blk.shared_pages
+                        - blk.reserved_pages)
+                if k > 0 and need <= al.free_pages:
+                    al.reserve_span(blk, blk.n_tokens, k)
+                    staged[blk.bid] = (blk, blk.n_tokens, k)
+            elif op == "arrive" and staged:
+                # the deferred reconcile: j ≤ K tokens actually landed on
+                # device; commit + unreserve return the surplus exactly as
+                # the overlap scheduler does a tick after dispatch
+                bid = int(rng.choice(list(staged)))
+                blk, n0, k = staged.pop(bid)
+                j = int(rng.integers(0, k + 1))
+                for _ in range(j):
+                    mask = np.zeros((pool.max_seqs,), bool)
+                    mask[blk.slot] = True
+                    pool.state, _ = reserve_positions(
+                        pool.state, jnp.asarray(mask),
+                        has_full=pool.has_full)
+                al.commit(blk, n0 + j)
+                al.unreserve(blk, n0 + j)
+            elif op in ("free", "double_free") and (quiet or swapped):
+                pick = quiet + swapped
                 blk = pick[rng.integers(len(pick))]
                 al.free(blk)
                 for bids in pinned_by.values():
