@@ -14,14 +14,17 @@
 # open-loop (seeded Poisson arrivals over the mixed chat/RAG/agent/
 # summarize profile set) at three offered-load intensities and writes
 # TTFT/TPOT percentiles plus goodput-under-SLO, overlap off vs on, to
-# BENCH_serving.json::traffic (DESIGN.md §9).
+# BENCH_serving.json::traffic (DESIGN.md §9); it also records one VBI
+# telemetry pass (DESIGN.md §10), re-verifies it with the offline trace
+# checker (`make check-trace`), and lands the metrics-registry snapshot
+# in BENCH_serving.json::traffic.metrics.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow check-vbi-api bench-serve bench-serve-prefix \
-	bench-serve-swap bench-serve-horizon bench-serve-window \
-	bench-serve-traffic bench serve-demo
+.PHONY: test test-slow check-vbi-api check-trace bench-serve \
+	bench-serve-prefix bench-serve-swap bench-serve-horizon \
+	bench-serve-window bench-serve-traffic bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -55,7 +58,13 @@ bench-serve-window:
 	    --workload long-decode-window
 
 bench-serve-traffic:
-	$(PYTHON) -m benchmarks.bench_traffic --smoke
+	$(PYTHON) -m benchmarks.bench_traffic --smoke --trace serve_trace.jsonl
+	$(PYTHON) -m repro.serve.telemetry serve_trace.jsonl
+
+# replay a recorded telemetry trace (TRACE=path/to/run.jsonl) against the
+# allocator conservation invariants; add --chrome for a Perfetto view
+check-trace:
+	$(PYTHON) -m repro.serve.telemetry $(or $(TRACE),serve_trace.jsonl)
 
 bench:
 	$(PYTHON) -m benchmarks.run

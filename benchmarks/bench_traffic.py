@@ -14,7 +14,10 @@ output bits.  SLO targets are derived from the undersubscribed overlap-off run (
 p50 TTFT, 2x its p99 TPOT), so they track the smoke model's actual speed
 instead of hard-coding wall times.
 
-``--smoke`` writes the ``traffic`` section of ``BENCH_serving.json``.
+``--smoke`` writes the ``traffic`` section of ``BENCH_serving.json``,
+including a ``metrics`` registry snapshot from one recorded telemetry
+pass (DESIGN.md §10) whose trace is replayed through the offline
+conservation checker; ``--trace out.jsonl`` also writes that trace.
 """
 from __future__ import annotations
 
@@ -31,12 +34,14 @@ from .common import emit
 def bench_traffic(n_requests: int = 32, seed: int = 0,
                   process: str = "poisson",
                   intensities: "tuple[float, ...]" = (0.5, 1.0, 1.5),
-                  reps: int = 3) -> "tuple[list[str], dict]":
+                  reps: int = 3,
+                  trace_path: "str | None" = None) -> "tuple[list[str], dict]":
     from repro.launch.serve import serve_config
     from repro.models.model import init_params
     from repro.serve.engine import PagedEngine
     from repro.serve.prefix_cache import PrefixCache
     from repro.serve.scheduler import Scheduler
+    from repro.serve.telemetry import Telemetry, check_trace
     from repro.serve.traffic import LatencyAccountant, TrafficDriver, make_trace
 
     cfg = serve_config("qwen3-0.6b")
@@ -58,11 +63,12 @@ def bench_traffic(n_requests: int = 32, seed: int = 0,
             sched.prefix_cache.n_pages))
         return dt, {r.rid: r.out for r in fin}
 
-    def open_loop(trace, overlap):
+    def open_loop(trace, overlap, telem=None):
         sched = Scheduler(eng, prefill_chunk=8, decode_horizon=4,
                           prefix_cache=PrefixCache(page_size=page_size),
-                          overlap=overlap)
-        acct = LatencyAccountant()
+                          overlap=overlap, telemetry=telem)
+        acct = LatencyAccountant(
+            metrics=telem.metrics if telem is not None else None)
         drv = TrafficDriver(sched, trace, accountant=acct)  # wall clock
         fin = drv.run()
         eng.alloc.release(sched.prefix_cache.evict(
@@ -109,9 +115,26 @@ def bench_traffic(n_requests: int = 32, seed: int = 0,
     slo_ttft = 5.0 * anchor["ttft_p50"]
     slo_tpot = 2.0 * anchor["tpot_p99"]
 
+    # -- one recorded pass (DESIGN.md §10): highest intensity, overlap on --
+    # The trace recorder rides along, the offline checker replays the
+    # events against the allocator conservation invariants, and the
+    # metrics-registry snapshot lands in BENCH_serving.json::traffic.metrics
+    telem = Telemetry(trace=True)
+    rec_rate = base_rate * intensities[-1]
+    open_loop(make_trace(cfg.vocab, n_requests, rate=rec_rate, seed=seed,
+                         process=process), overlap=True, telem=telem)
+    eng.alloc.attach_tracer(None)               # engine is shared; detach
+    trace_summary = check_trace(telem.tracer.events)
+    if trace_path:
+        telem.tracer.write_jsonl(trace_path)
+        print(f"# trace: {len(telem.tracer.events)} events -> {trace_path}"
+              f"; checker OK — {trace_summary}")
+
     results = {"n_requests": n_requests, "process": process, "seed": seed,
                "closed_loop_capacity_req_s": base_rate,
                "slo_ttft_s": slo_ttft, "slo_tpot_s": slo_tpot,
+               "metrics": telem.metrics.snapshot(),
+               "trace_check": trace_summary,
                "intensities": {}}
     lines = []
     for key, r in runs.items():
@@ -150,9 +173,14 @@ if __name__ == "__main__":
     ap.add_argument("--process", default="poisson",
                     choices=("poisson", "bursty"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="OUT.jsonl", default=None,
+                    help="write the recorded run's telemetry trace "
+                         "(verify/convert with "
+                         "python -m repro.serve.telemetry)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     n = args.requests if args.smoke or args.requests != 12 else 24
     lines, results = bench_traffic(n_requests=n, seed=args.seed,
-                                   process=args.process)
+                                   process=args.process,
+                                   trace_path=args.trace)
     write_bench_json({"traffic": results})

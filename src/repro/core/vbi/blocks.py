@@ -136,6 +136,15 @@ class _SwapImage:
     aux: Optional[tuple] = None
 
 
+def _image_nbytes(img: "_SwapImage") -> int:
+    """Exact host bytes one swap image holds (K/V pages + aux state) —
+    what the swap-traffic counters and per-tier gauges report."""
+    n = img.k.nbytes + img.v.nbytes
+    if img.aux is not None:
+        n += sum(a.nbytes for a in img.aux)
+    return n
+
+
 class HostSwapTier:
     """Host backing store for swapped-out blocks, capacity-bounded in
     pages.  Holds exact K/V bytes; the device holds nothing for a swapped
@@ -160,6 +169,11 @@ class HostSwapTier:
         self.used_pages -= img.charge
         return img
 
+    @property
+    def bytes_held(self) -> int:
+        """Exact host bytes currently parked in the tier (gauge food)."""
+        return sum(_image_nbytes(img) for img in self.images.values())
+
 
 class VBIAllocator:
     """The single interface through which KV memory is allocated, shared,
@@ -180,12 +194,41 @@ class VBIAllocator:
         self.swap = (HostSwapTier(host_swap_pages) if host_swap_pages > 0
                      else None)
         self._next_bid = 0
+        # block-lifecycle trace recorder (serve/telemetry.py, DESIGN.md
+        # §10) — duck-typed so core/ never imports serve/.  None (the
+        # default) keeps every op at one `is None` check of overhead.
+        self.tracer = None
         self.stats = {"allocs": 0, "frees": 0, "prefix_maps": 0,
                       "prefix_pages_mapped": 0, "cow_clones": 0,
                       "cached_page_retains": 0, "cached_page_releases": 0,
                       "swap_outs": 0, "swap_ins": 0, "swapped_out_pages": 0,
                       "swapped_in_pages": 0, "swap_rejects": 0,
-                      "unreserved_pages": 0}
+                      "unreserved_pages": 0, "swap_bytes_out": 0,
+                      "swap_bytes_in": 0}
+
+    # -- telemetry (DESIGN.md §10) -------------------------------------------
+    def attach_tracer(self, tracer) -> None:
+        """Start emitting block-lifecycle events into ``tracer`` (a
+        ``serve.telemetry.TraceRecorder``).  The first event is the pool
+        geometry the offline checker replays against."""
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.meta(
+                n_pages=self.pool.n_pages, page_size=self.pool.page_size,
+                max_seqs=self.pool.max_seqs,
+                swap_capacity=self.swap.capacity_pages if self.swap else 0)
+
+    def _trace(self, op: str, blk: Optional[VirtualBlock] = None, **fields):
+        t = self.tracer
+        if t is None:
+            return
+        if blk is not None:
+            # every block op carries the block's declared data properties:
+            # the trace shows not just what moved, but *why* it was placed
+            fields.setdefault("bid", blk.bid)
+            fields.setdefault("slot", blk.slot)
+            fields["props"] = int(blk.props)
+        t.block_op(op, **fields)
 
     # -- geometry / budget ---------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -231,6 +274,7 @@ class VBIAllocator:
         self.pool.state = admit_slot(self.pool.state, jnp.int32(slot))
         self.blocks[slot] = blk
         self.stats["allocs"] += 1
+        self._trace("alloc", blk)
         return blk
 
     def free(self, block: VirtualBlock) -> None:
@@ -243,7 +287,10 @@ class VBIAllocator:
             self.swap.pop(block.bid)
             block.status = "freed"
             self.stats["frees"] += 1
+            self._trace("free", block, freed_reserved=0, was="swapped")
             return
+        self._trace("free", block, freed_reserved=block.reserved_pages,
+                    was="resident")
         self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
         self.mtl.disable_vb(0, block.vbid)
         self.free_pages += block.reserved_pages
@@ -264,6 +311,7 @@ class VBIAllocator:
             assert grow <= self.free_pages, "KV pool oversubscribed"
             self.free_pages -= grow
             block.reserved_pages = n_pages
+            self._trace("reserve", block, grow=grow, reserved=n_pages)
 
     def reserve(self, block: VirtualBlock, n_tokens: int) -> None:
         """Token-level reservation: cover ``n_tokens`` minus pages in the
@@ -285,6 +333,7 @@ class VBIAllocator:
         """Record that ``n_tokens`` are now written on device (mirror of
         ``seq_lens`` — what a swap image must cover)."""
         block.n_tokens = n_tokens
+        self._trace("commit", block, n_tokens=n_tokens)
 
     def unreserve(self, block: VirtualBlock, n_tokens: int) -> None:
         """Horizon-boundary reconciliation (DESIGN.md §7): shrink the
@@ -295,9 +344,12 @@ class VBIAllocator:
         owns on device, so the mirror stays exact."""
         keep = max(0, self.pages_for(n_tokens) - block.shared_pages)
         if keep < block.reserved_pages:
-            self.free_pages += block.reserved_pages - keep
-            self.stats["unreserved_pages"] += block.reserved_pages - keep
+            returned = block.reserved_pages - keep
+            self.free_pages += returned
+            self.stats["unreserved_pages"] += returned
             block.reserved_pages = keep
+            self._trace("unreserve", block, returned=returned,
+                        reserved=keep)
 
     # -- sharing / COW (the prefix-cache face of the API) ---------------------
     def map_shared(self, block: VirtualBlock, page_ids: Sequence[int],
@@ -317,6 +369,8 @@ class VBIAllocator:
         block.props |= VBProps.SHARED_RO
         self.stats["prefix_maps"] += 1
         self.stats["prefix_pages_mapped"] += len(page_ids)
+        self._trace("map_shared", block, n_pages=len(page_ids),
+                    n_tokens=n_tokens)
 
     def cow_break(self, block: VirtualBlock, page_idx: int, src_page: int,
                   new_len: int) -> None:
@@ -329,6 +383,8 @@ class VBIAllocator:
         block.n_tokens = new_len
         block.props |= VBProps.COW
         self.stats["cow_clones"] += 1
+        self._trace("cow_break", block, page_idx=page_idx,
+                    src_page=src_page, n_tokens=new_len)
 
     def page_row(self, block: VirtualBlock, n_pages: int) -> List[int]:
         """Device→host read of the block's first ``n_pages`` page ids (for
@@ -352,6 +408,10 @@ class VBIAllocator:
             from_block.reserved_pages -= len(page_ids)
             from_block.shared_pages += len(page_ids)
         self.stats["cached_page_retains"] += len(page_ids)
+        if page_ids:
+            self._trace("retain", n_pages=len(page_ids),
+                        from_bid=from_block.bid if from_block else None,
+                        slot=from_block.slot if from_block else -1)
 
     def release(self, page_ids: Sequence[int]) -> None:
         """Prefix-cache eviction: drop the cache's reference; refcount-zero
@@ -362,6 +422,8 @@ class VBIAllocator:
                 self.pool.state, self._padded_ids(chunk), jnp.int32(len(chunk)))
         self.free_pages += len(page_ids)
         self.stats["cached_page_releases"] += len(page_ids)
+        if page_ids:
+            self._trace("release", n_pages=len(page_ids), slot=-1)
 
     # -- the host swap tier (property-driven placement) ------------------------
     def swap_out(self, block: VirtualBlock) -> bool:
@@ -390,6 +452,11 @@ class VBIAllocator:
                          np.asarray(jax.device_get(v))[:, :n_pages],
                          n_pages, block.n_tokens, aux=aux, charge=charge)
         self.swap.put(block.bid, img)
+        n_bytes = _image_nbytes(img)
+        self.stats["swap_bytes_out"] += n_bytes
+        self._trace("swap_out", block, n_pages=n_pages, charge=charge,
+                    freed_reserved=block.reserved_pages, bytes=n_bytes,
+                    n_tokens=block.n_tokens)
         self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
         self.mtl.disable_vb(0, block.vbid)
         self.free_pages += block.reserved_pages
@@ -439,6 +506,10 @@ class VBIAllocator:
         self.blocks[slot] = block
         self.stats["swap_ins"] += 1
         self.stats["swapped_in_pages"] += img.n_pages
+        n_bytes = _image_nbytes(img)
+        self.stats["swap_bytes_in"] += n_bytes
+        self._trace("swap_in", block, n_pages=img.n_pages, charge=img.charge,
+                    reserve=need, bytes=n_bytes, n_tokens=img.n_tokens)
         return block
 
 

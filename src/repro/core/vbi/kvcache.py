@@ -48,6 +48,24 @@ def aux_swap_charge(n_ring: int, ring_pages: int, n_recurrent: int) -> int:
     return (ring_pages if n_ring else 0) + (1 if n_recurrent else 0)
 
 
+def tier_nbytes(state: "PagedServeState") -> "Dict[str, int]":
+    """Byte footprint of each device-resident cache tier (DESIGN.md §10).
+
+    Pure shape metadata — ``.nbytes`` never materialises or syncs device
+    buffers — so the telemetry gauges can sample it every tick at zero
+    cost.  Keys mirror the property-typed pools of DESIGN.md §8: the
+    unbounded paged FULL pool, the capped RING frames, and the
+    constant-size RECURRENT state."""
+    return {
+        "full": state.k_pages.nbytes + state.v_pages.nbytes,
+        "ring": state.k_ring.nbytes + state.v_ring.nbytes,
+        "recurrent": (state.rg_h.nbytes + state.rg_conv.nbytes
+                      + state.ssm_state.nbytes + state.ssm_conv.nbytes),
+        "translation": (state.page_table.nbytes + state.free_stack.nbytes
+                        + state.page_refcounts.nbytes),
+    }
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PagedKVState:

@@ -36,6 +36,14 @@ goodput-under-SLO instead of aggregate tok/s.  ``--overlap`` enables
 double-buffered dispatch in either mode: the host stages horizon N+1
 (admission, reservation, prefix lookup) while the device still runs
 horizon N — same output bits, fewer stalls.
+
+``--trace out.jsonl`` records the VBI telemetry trace (DESIGN.md §10):
+request lifecycle spans, per-tick host timeline, every block op with its
+declared properties, and per-tick occupancy gauges.  The run self-checks
+the trace against the allocator conservation invariants on exit;
+``--trace-format chrome`` writes Chrome ``trace_event`` JSON for
+Perfetto instead, and ``--metrics`` prints the metrics-registry
+snapshot.  Offline: ``python -m repro.serve.telemetry trace.jsonl``.
 """
 from __future__ import annotations
 
@@ -52,6 +60,7 @@ from ..models.model import init_params
 from ..serve.engine import PagedEngine
 from ..serve.prefix_cache import PrefixCache
 from ..serve.scheduler import Scheduler
+from ..serve.telemetry import Telemetry
 
 
 def serve_config(arch: str, smoke: bool = True):
@@ -115,12 +124,30 @@ def main(argv=None) -> None:
                     help="double-buffered dispatch: stage horizon N+1 on "
                          "the host while the device runs horizon N "
                          "(bit-exact; works in batch and --traffic modes)")
+    ap.add_argument("--trace", metavar="OUT", default=None,
+                    help="record a VBI telemetry trace (DESIGN.md §10): "
+                         "request lifecycle, tick timeline spans, every "
+                         "block op with its declared properties, per-tick "
+                         "gauges; verify/convert offline with "
+                         "python -m repro.serve.telemetry")
+    ap.add_argument("--trace-format", default="jsonl",
+                    choices=("jsonl", "chrome"),
+                    help="trace file format: 'jsonl' (one event per line, "
+                         "the checker's input) or 'chrome' (trace_event "
+                         "JSON for Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics-registry snapshot (counters, "
+                         "gauges with high-water marks, latency "
+                         "histograms) at the end of the run")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="per-sequence reference path (serve/paged.py)")
     args = ap.parse_args(argv)
     if args.legacy and (args.traffic or args.overlap):
         ap.error("--traffic/--overlap need the jitted engine path "
+                 "(drop --legacy)")
+    if args.legacy and (args.trace or args.metrics):
+        ap.error("--trace/--metrics need the jitted engine path "
                  "(drop --legacy)")
 
     cfg = serve_config(args.arch, args.smoke)
@@ -158,10 +185,12 @@ def main(argv=None) -> None:
                   "are ineligible for cross-request page sharing "
                   "(DESIGN.md §8)")
             cache = None
+        telem = (Telemetry(trace=args.trace is not None)
+                 if args.trace or args.metrics else None)
         sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
                           prefix_cache=cache,
                           decode_horizon=args.decode_horizon,
-                          overlap=args.overlap)
+                          overlap=args.overlap, telemetry=telem)
         if args.traffic:
             finished = _run_traffic(cfg, sched, args)
         else:
@@ -180,9 +209,32 @@ def main(argv=None) -> None:
         if cache is not None:
             print(f"[serve] prefix cache: hit_rate={cache.hit_rate:.2f} "
                   f"stats {cache.stats}")
+        if telem is not None:
+            _emit_telemetry(telem, args)
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {decoded} token-steps in "
           f"{dt:.1f}s ({decoded / dt:.1f} tok/s)")
+
+
+def _emit_telemetry(telem, args) -> None:
+    """Write the recorded trace (JSONL or Chrome trace_event), self-check
+    it against the allocator conservation invariants, and print the
+    metrics snapshot when asked (DESIGN.md §10)."""
+    import json
+
+    from ..serve.telemetry import check_trace
+    if telem.tracer is not None:
+        rec = telem.tracer
+        if args.trace_format == "chrome":
+            rec.write_chrome(args.trace)
+        else:
+            rec.write_jsonl(args.trace)
+        summary = check_trace(rec.events)
+        print(f"[serve] trace: {len(rec.events)} events -> {args.trace} "
+              f"({args.trace_format}); checker OK — {summary}")
+    if args.metrics:
+        print("[serve] metrics snapshot:")
+        print(json.dumps(telem.metrics.snapshot(), indent=2, sort_keys=True))
 
 
 def _run_traffic(cfg, sched, args):

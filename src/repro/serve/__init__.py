@@ -2,6 +2,8 @@ from .engine import PagedEngine, batched_paged_attention
 from .prefix_cache import PrefixCache, PrefixMatch
 from .scheduler import Request, Scheduler
 from .step import make_decode_step, make_prefill_step
+from .telemetry import (MetricsRegistry, Telemetry, TraceRecorder,
+                        check_trace)
 from .traffic import (LatencyAccountant, ScenarioProfile, TimedRequest,
                       TrafficDriver, VirtualClock, WallClock, make_trace)
 
@@ -9,4 +11,5 @@ __all__ = ["make_prefill_step", "make_decode_step", "PagedEngine",
            "batched_paged_attention", "Scheduler", "Request",
            "PrefixCache", "PrefixMatch", "ScenarioProfile", "TimedRequest",
            "make_trace", "LatencyAccountant", "TrafficDriver",
-           "VirtualClock", "WallClock"]
+           "VirtualClock", "WallClock", "Telemetry", "MetricsRegistry",
+           "TraceRecorder", "check_trace"]

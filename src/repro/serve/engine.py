@@ -358,6 +358,7 @@ class PagedEngine:
         # produced are reconciled host-side from the returned block.
         self.stats = {"decode_steps": 0, "decode_dispatches": 0,
                       "prefill_chunks": 0}
+        self.metrics = None   # set by attach_metrics (serve/telemetry.py)
         rnn_w = (cfg.rnn_width or cfg.d_model) if geom.n_rg else 0
         ssm_H = ssm_P = ssm_conv_ch = 0
         if geom.n_ssm:
@@ -405,6 +406,18 @@ class PagedEngine:
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._decode_many: Dict[int, object] = {}   # horizon K -> jitted fn
+
+    def attach_metrics(self, metrics) -> None:
+        """Move the engine's dispatch counters onto a shared
+        MetricsRegistry (serve/telemetry.py, keys ``engine.*``).  The
+        ``stats`` face stays dict-compatible and keeps its counts, so
+        attaching mid-run loses nothing."""
+        from .telemetry import StatsView
+        old = dict(self.stats)
+        self.metrics = metrics
+        self.stats = StatsView(metrics, prefix="engine.", keys=list(old))
+        for k, v in old.items():
+            self.stats[k] = v
 
     # -- the property-typed pool protocol (read by allocator + scheduler) ---
     @property

@@ -65,6 +65,7 @@ open-loop traffic harness (serve/traffic.py) timestamps for TTFT/TPOT.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional
@@ -74,8 +75,19 @@ import numpy as np
 
 from ..core.vbi.address_space import VBProps
 from ..core.vbi.blocks import DEFAULT_BLOCK_PROPS, VirtualBlock
+from ..core.vbi.kvcache import tier_nbytes
 from .engine import PagedEngine
 from .prefix_cache import PrefixCache, PrefixMatch, _Node
+from .telemetry import StatsView, Telemetry
+
+#: ``Scheduler.stats`` keys, pinned: the dict-compatible face every test
+#: and BENCH_serving.json key reads — storage lives in the registry
+_STAT_KEYS = ("preemptions", "steps", "prefix_hits",
+              "prefix_tokens_reused", "cache_evicted_pages", "swap_outs",
+              "swap_ins", "prefill_tokens", "host_syncs",
+              "prefill_host_reads", "prefill_reads_skipped",
+              "horizon_truncations", "overlap_staged_ticks",
+              "sync_device_ready", "sync_device_wait")
 
 
 @dataclasses.dataclass
@@ -114,7 +126,8 @@ class Scheduler:
                  prefix_cache: Optional[PrefixCache] = None,
                  block_props: VBProps = DEFAULT_BLOCK_PROPS,
                  decode_horizon: int = 1, overlap: bool = False,
-                 on_tokens=None, on_finish=None):
+                 on_tokens=None, on_finish=None,
+                 telemetry: Optional[Telemetry] = None):
         if prefix_cache is not None:
             assert prefix_cache.page_size == engine.page_size
             # RING frames are position-recycled and RECURRENT state is not
@@ -156,13 +169,74 @@ class Scheduler:
         self._dec_toks = np.zeros((S,), np.int32)
         self._dec_mask = np.zeros((S,), bool)
         self._dec_steps = np.zeros((S,), np.int32)
-        self.stats = {"preemptions": 0, "steps": 0, "prefix_hits": 0,
-                      "prefix_tokens_reused": 0, "cache_evicted_pages": 0,
-                      "swap_outs": 0, "swap_ins": 0, "prefill_tokens": 0,
-                      "host_syncs": 0, "prefill_host_reads": 0,
-                      "prefill_reads_skipped": 0, "horizon_truncations": 0,
-                      "overlap_staged_ticks": 0, "sync_device_ready": 0,
-                      "sync_device_wait": 0}
+        # telemetry (DESIGN.md §10): counters always live in a registry
+        # (as cheap as the dict they replace, dict-compatible through
+        # StatsView); per-tick gauge sampling and the trace recorder run
+        # only when a Telemetry bundle is passed in — the disabled path
+        # adds one `is None` check per emit site and zero host syncs.
+        self.telemetry = telemetry
+        self.metrics = (telemetry.metrics if telemetry is not None
+                        else Telemetry().metrics)
+        self.tracer = telemetry.tracer if telemetry is not None else None
+        self.stats = StatsView(self.metrics, prefix="sched.",
+                               keys=_STAT_KEYS)
+        if telemetry is not None:
+            engine.attach_metrics(self.metrics)
+        if self.tracer is not None:
+            self.alloc.attach_tracer(self.tracer)
+            self.tracer.meta(
+                model=engine.cfg.name, decode_horizon=decode_horizon,
+                overlap=overlap, prefill_chunk=prefill_chunk,
+                tier_nbytes=tier_nbytes(engine.state))
+
+    # -- telemetry emit sites (each one `is None` check when disabled) -------
+    def _span(self, name: str, **args):
+        """Tick-timeline span context (no-op without a trace recorder)."""
+        if self.tracer is None:
+            return contextlib.nullcontext({})
+        return self.tracer.span(name, tick=self.stats["steps"], **args)
+
+    def _req_ev(self, ev: str, req: Request, **fields) -> None:
+        if self.tracer is not None:
+            self.tracer.req_event(ev, req.rid, **fields)
+
+    def _sample_gauges(self) -> None:
+        """End-of-tick gauge sample: device-pool occupancy, host-swap
+        traffic, per-tier slot usage, prefix-cache share depth.  Every
+        value comes from a host mirror — never a device read — so the
+        sample cannot add a sync.  The ``alloc.free_pages`` /
+        ``swap.pages_used`` names are load-bearing: the offline checker
+        cross-validates each sample against its event replay."""
+        if self.telemetry is None:
+            return
+        al, geom = self.alloc, self.engine.geom
+        a_stats = al.stats
+        n_pre = sum(1 for st in self.slots.values() if st.prefilling)
+        vals = {
+            "alloc.free_pages": al.free_pages,
+            "alloc.pages_used": self.engine.n_pages - 1 - al.free_pages,
+            "swap.pages_used": al.swap.used_pages if al.swap else 0,
+            "swap.bytes_held": al.swap.bytes_held if al.swap else 0,
+            "swap.bytes_out": a_stats.get("swap_bytes_out", 0),
+            "swap.bytes_in": a_stats.get("swap_bytes_in", 0),
+            "slots.active": len(self.slots),
+            "slots.prefilling": n_pre,
+            "slots.decoding": len(self.slots) - n_pre,
+            "queue.depth": len(self.queue),
+            "tier.ring_slots": len(self.slots) if geom.n_ring else 0,
+            "tier.recurrent_slots": (len(self.slots)
+                                     if geom.n_recurrent else 0),
+            "cache.pages": (self.prefix_cache.n_pages
+                            if self.prefix_cache else 0),
+            "cache.pinned_pages": (
+                self.prefix_cache.n_pages
+                - self.prefix_cache.evictable_pages
+                if self.prefix_cache else 0),
+        }
+        for k, v in vals.items():
+            self.metrics.gauge(k).set(v)
+        if self.tracer is not None:
+            self.tracer.gauge_sample(self.stats["steps"], vals)
 
     # -- request intake ------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int,
@@ -198,7 +272,9 @@ class Scheduler:
                     f"incl. null page) — it can never be scheduled")
         rid = self._next_rid if rid is None else rid
         self._next_rid = max(self._next_rid, rid) + 1
-        self.queue.append(Request(rid, list(prompt), max_new))
+        req = Request(rid, list(prompt), max_new)
+        self.queue.append(req)
+        self._req_ev("arrive", req, prompt_len=len(prompt), max_new=max_new)
         return rid
 
     # -- page budgeting (delegated to the allocator's host mirror) -----------
@@ -272,6 +348,14 @@ class Scheduler:
     def _admit(self) -> None:
         free_slots = [s for s in range(self.engine.max_seqs)
                       if s not in self.slots]
+        if not (self.queue and free_slots):
+            return
+        with self._span("tick.admit") as ext:
+            n0 = len(self.slots)
+            self._admit_loop(free_slots)
+            ext["admitted"] = len(self.slots) - n0
+
+    def _admit_loop(self, free_slots: List[int]) -> None:
         while self.queue and free_slots:
             req = self.queue[0]
             if req.block is not None:
@@ -321,6 +405,8 @@ class Scheduler:
                 self.prefix_cache.record(match, len(req.tokens))
                 st.pinned.extend(match.all_nodes())
             self.slots[slot] = st
+            self._req_ev("admit", req, slot=slot, bid=blk.bid,
+                         cached_tokens=st.fed, budget_pages=budget)
 
     def _admit_swapped(self, req: Request, free_slots: List[int]) -> bool:
         """Re-admit a host-swapped request: budget its full span (plus the
@@ -338,6 +424,8 @@ class Scheduler:
         self._admit_seq += 1
         self.slots[slot] = st
         self.stats["swap_ins"] += 1
+        self._req_ev("admit", req, slot=slot, bid=blk.bid, resume="swap",
+                     restored_tokens=st.fed, budget_pages=budget)
         return True
 
     def _evict(self, slot: int) -> None:
@@ -345,6 +433,8 @@ class Scheduler:
         self._unpin(st)
         self.alloc.free(st.block)
         self.finished.append(st.req)
+        self._req_ev("finish", st.req, slot=slot, n_out=len(st.req.out),
+                     preemptions=st.req.preemptions)
         if self.on_finish is not None:
             self.on_finish(st.req)
 
@@ -367,11 +457,15 @@ class Scheduler:
             self._unpin(st)
             st.req.block = st.block
             self.stats["swap_outs"] += 1
+            placement = "swap"
         else:
             st.req.block = None
             self._cache_insert(st)
             self._unpin(st)
             self.alloc.free(st.block)
+            placement = "discard"
+        self._req_ev("preempt", st.req, slot=slot, placement=placement,
+                     fed=st.fed)
         st.req.preemptions += 1
         self.queue.appendleft(st.req)    # keep its generated prefix
         self.stats["preemptions"] += 1
@@ -447,17 +541,20 @@ class Scheduler:
         pre = {s: st for s, st in self.slots.items() if st.prefilling}
         if not pre:
             return None
-        C = self.prefill_chunk
-        toks, counts = self._pre_toks, self._pre_counts
-        toks.fill(0)
-        counts.fill(0)
-        for s, st in pre.items():
-            seq = st.req.tokens
-            n = min(C, st.prefill_len - st.fed)
-            self.alloc.reserve(st.block, st.fed + n)
-            toks[s, :n] = seq[st.fed:st.fed + n]
-            counts[s] = n
-        return pre, counts.copy()
+        with self._span("tick.prefill_stage") as ext:
+            C = self.prefill_chunk
+            toks, counts = self._pre_toks, self._pre_counts
+            toks.fill(0)
+            counts.fill(0)
+            for s, st in pre.items():
+                seq = st.req.tokens
+                n = min(C, st.prefill_len - st.fed)
+                self.alloc.reserve(st.block, st.fed + n)
+                toks[s, :n] = seq[st.fed:st.fed + n]
+                counts[s] = n
+            ext["slots"] = len(pre)
+            ext["tokens"] = int(counts.sum())
+            return pre, counts.copy()
 
     def _prefill_launch(self, staged: Optional[tuple]) -> Optional[tuple]:
         """Device half: transfer the staged buffers and dispatch the
@@ -466,8 +563,9 @@ class Scheduler:
         if staged is None:
             return None
         pre, counts = staged
-        nxt_dev = self.engine.prefill_chunk(jnp.array(self._pre_toks),
-                                            jnp.array(self._pre_counts))
+        with self._span("tick.prefill_launch", slots=len(pre)):
+            nxt_dev = self.engine.prefill_chunk(jnp.array(self._pre_toks),
+                                                jnp.array(self._pre_counts))
         self.stats["prefill_tokens"] += int(counts.sum())
         return pre, counts, nxt_dev
 
@@ -483,25 +581,30 @@ class Scheduler:
         if handle is None:
             return
         pre, counts, nxt_dev = handle
-        finishing = [s for s, st in pre.items()
-                     if st.fed + counts[s] >= st.prefill_len]
-        nxt = None
-        if finishing:
-            nxt = np.asarray(nxt_dev)
-            self.stats["host_syncs"] += 1
-            self.stats["prefill_host_reads"] += 1
-        else:
-            self.stats["prefill_reads_skipped"] += 1
-        for s, st in pre.items():
-            st.fed += int(counts[s])
-            self.alloc.commit(st.block, st.fed)
-            if not st.prefilling:          # prompt done → first token
-                if not st.inserted:        # share the prompt's KV pages
-                    self._cache_insert(st)
-                    st.inserted = True
-                st.req.out.append(int(nxt[s]))
-                if self.on_tokens is not None:
-                    self.on_tokens(st.req, 1)
+        with self._span("tick.prefill_finish") as ext:
+            finishing = [s for s, st in pre.items()
+                         if st.fed + counts[s] >= st.prefill_len]
+            nxt = None
+            if finishing:
+                nxt = np.asarray(nxt_dev)
+                self.stats["host_syncs"] += 1
+                self.stats["prefill_host_reads"] += 1
+            else:
+                self.stats["prefill_reads_skipped"] += 1
+            ext["host_read"] = bool(finishing)
+            for s, st in pre.items():
+                st.fed += int(counts[s])
+                self.alloc.commit(st.block, st.fed)
+                self._req_ev("prefill_chunk", st.req, slot=s,
+                             n=int(counts[s]), fed=st.fed)
+                if not st.prefilling:      # prompt done → first token
+                    if not st.inserted:    # share the prompt's KV pages
+                        self._cache_insert(st)
+                        st.inserted = True
+                    st.req.out.append(int(nxt[s]))
+                    self._req_ev("first_token", st.req, slot=s)
+                    if self.on_tokens is not None:
+                        self.on_tokens(st.req, 1)
 
     def _decode_dispatch(self, pre_ids) -> None:
         """Plan + dispatch one fused decode horizon for slots past their
@@ -517,18 +620,19 @@ class Scheduler:
             dec_ids = [s for s in dec_ids if s in self.slots]
         if not dec_ids:
             return
-        toks, mask = self._dec_toks, self._dec_mask
-        steps = self._dec_steps
-        toks.fill(0)
-        mask.fill(False)
-        steps.fill(0)
-        for s in dec_ids:
-            st = self.slots[s]
-            toks[s] = st.req.tokens[-1]
-            mask[s] = True
-            steps[s] = wants[s]         # exactly the span reserved above
-        block = self.engine.decode_many(
-            jnp.array(toks), jnp.array(mask), jnp.array(steps), k)
+        with self._span("tick.decode_dispatch", k=k, slots=len(dec_ids)):
+            toks, mask = self._dec_toks, self._dec_mask
+            steps = self._dec_steps
+            toks.fill(0)
+            mask.fill(False)
+            steps.fill(0)
+            for s in dec_ids:
+                st = self.slots[s]
+                toks[s] = st.req.tokens[-1]
+                mask[s] = True
+                steps[s] = wants[s]     # exactly the span reserved above
+            block = self.engine.decode_many(
+                jnp.array(toks), jnp.array(mask), jnp.array(steps), k)
         self._pending = (block, dec_ids, wants)
 
     def _decode_reconcile(self) -> None:
@@ -542,21 +646,27 @@ class Scheduler:
             return
         block_dev, dec_ids, wants = self._pending
         self._pending = None
-        self.stats["sync_device_ready" if self.engine.block_ready(block_dev)
-                   else "sync_device_wait"] += 1
-        block = np.asarray(block_dev)
-        self.stats["host_syncs"] += 1
-        for s in dec_ids:
-            st = self.slots[s]
-            col = block[:, s]
-            produced = col[col >= 0]              # -1 = masked lane
-            st.fed += len(produced)
-            self.alloc.commit(st.block, st.fed)
-            if len(produced) < wants[s]:          # stopped on device (EOS):
-                self.alloc.unreserve(st.block, st.fed)   # return surplus
-            st.req.out.extend(int(t) for t in produced)
-            if self.on_tokens is not None and len(produced):
-                self.on_tokens(st.req, len(produced))
+        with self._span("tick.decode_reconcile", slots=len(dec_ids)) as ext:
+            ready = self.engine.block_ready(block_dev)
+            self.stats["sync_device_ready" if ready
+                       else "sync_device_wait"] += 1
+            ext["sync"] = "ready" if ready else "wait"
+            block = np.asarray(block_dev)
+            self.stats["host_syncs"] += 1
+            for s in dec_ids:
+                st = self.slots[s]
+                col = block[:, s]
+                produced = col[col >= 0]          # -1 = masked lane
+                st.fed += len(produced)
+                self.alloc.commit(st.block, st.fed)
+                if len(produced) < wants[s]:      # stopped on device (EOS):
+                    self.alloc.unreserve(st.block, st.fed)  # return surplus
+                st.req.out.extend(int(t) for t in produced)
+                if len(produced):
+                    self._req_ev("tokens", st.req, slot=s,
+                                 n=int(len(produced)))
+                if self.on_tokens is not None and len(produced):
+                    self.on_tokens(st.req, len(produced))
 
     def _evict_finished(self) -> None:
         """Eviction: max_new reached, or the device emitted EOS."""
@@ -608,6 +718,7 @@ class Scheduler:
         if not self.overlap:
             self._decode_reconcile()
             self._evict_finished()
+        self._sample_gauges()
         return self.finished[done_before:]
 
     def run(self, max_steps: int = 100_000) -> List[Request]:

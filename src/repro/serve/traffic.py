@@ -144,20 +144,10 @@ def make_trace(vocab: int, n_requests: int, rate: float, seed: int,
 # --------------------------------------------------------------------------
 # latency accounting: TTFT / TPOT percentiles + goodput-under-SLO
 # --------------------------------------------------------------------------
-def percentile(xs: Sequence[float], q: float) -> float:
-    """Linear-interpolation percentile on the sorted sample (the numpy
-    default), pinned here so the SLO math is self-contained and the
-    hand-computed unit tests read against one definition."""
-    assert 0.0 <= q <= 100.0
-    s = sorted(float(x) for x in xs)
-    if not s:
-        return float("nan")
-    if len(s) == 1:
-        return s[0]
-    pos = q / 100.0 * (len(s) - 1)
-    lo = int(np.floor(pos))
-    hi = min(lo + 1, len(s) - 1)
-    return s[lo] + (pos - lo) * (s[hi] - s[lo])
+# the percentile rule lives in serve/telemetry.py now (one implementation
+# for every latency number the stack reports); re-exported here because
+# the SLO tests and benches read it from this module
+from .telemetry import Histogram, MetricsRegistry, percentile  # noqa: E402,F401
 
 
 @dataclasses.dataclass
@@ -189,8 +179,15 @@ class LatencyAccountant:
     requests meeting BOTH SLOs — the spread between them is the cost of
     queueing the closed-loop benches could never see."""
 
-    def __init__(self) -> None:
+    def __init__(self, metrics: Optional[MetricsRegistry] = None) -> None:
         self.reqs: Dict[int, _ReqTiming] = {}
+        # streaming TTFT/TPOT samples feed the shared histogram type
+        # (serve/telemetry.py): a TTFT is final at the first token, a TPOT
+        # at finish — so the registry's view is live, not summary-time
+        m = metrics if metrics is not None else MetricsRegistry()
+        self.metrics = m
+        self.ttft_hist = m.histogram("traffic.ttft_s")
+        self.tpot_hist = m.histogram("traffic.tpot_s")
 
     def on_arrival(self, rid: int, t: float) -> None:
         assert rid not in self.reqs
@@ -202,11 +199,15 @@ class LatencyAccountant:
         r = self.reqs[rid]
         if r.t_first is None:
             r.t_first = t
+            self.ttft_hist.observe(r.ttft)
         r.t_last = t
         r.n_tokens += n
 
     def on_finish(self, rid: int, t: float) -> None:
-        self.reqs[rid].t_finish = t
+        r = self.reqs[rid]
+        r.t_finish = t
+        if r.t_first is not None:
+            self.tpot_hist.observe(r.tpot)
 
     def summary(self, slo_ttft: float = float("inf"),
                 slo_tpot: float = float("inf")) -> Dict[str, float]:
@@ -217,8 +218,12 @@ class LatencyAccountant:
         t0 = min(r.t_arrival for r in self.reqs.values())
         t1 = max(r.t_finish for r in done)
         dur = max(t1 - t0, 1e-9)
-        ttfts = [r.ttft for r in done]
-        tpots = [r.tpot for r in done]
+        # the summary reduces over *finished* requests only, so it builds
+        # its own histograms rather than reading the streaming ones (which
+        # may hold first-token samples of still-running requests)
+        ttfts, tpots = Histogram(), Histogram()
+        ttfts.observe_many(r.ttft for r in done)
+        tpots.observe_many(r.tpot for r in done)
         good = [r for r in done
                 if r.ttft <= slo_ttft and r.tpot <= slo_tpot]
         return {
@@ -226,10 +231,10 @@ class LatencyAccountant:
             "duration_s": dur,
             "throughput_req_s": len(done) / dur,
             "throughput_tok_s": sum(r.n_tokens for r in done) / dur,
-            "ttft_p50": percentile(ttfts, 50), "ttft_p99":
-                percentile(ttfts, 99), "ttft_mean": float(np.mean(ttfts)),
-            "tpot_p50": percentile(tpots, 50), "tpot_p99":
-                percentile(tpots, 99), "tpot_mean": float(np.mean(tpots)),
+            "ttft_p50": ttfts.percentile(50), "ttft_p99":
+                ttfts.percentile(99), "ttft_mean": ttfts.mean,
+            "tpot_p50": tpots.percentile(50), "tpot_p99":
+                tpots.percentile(99), "tpot_mean": tpots.mean,
             "slo_ttft": slo_ttft, "slo_tpot": slo_tpot,
             "slo_attainment": len(good) / len(done),
             "goodput_req_s": len(good) / dur,

@@ -28,6 +28,7 @@ import pytest
 from repro.core.vbi.address_space import VBProps
 from repro.core.vbi.blocks import (LegacyKVAllocator, PagePool, VBIAllocator)
 from repro.core.vbi.kvcache import PagedKVManager, reserve_positions
+from repro.serve.telemetry import TraceRecorder, check_trace
 
 
 def _mk(n_pages=33, page_size=2, max_seqs=4, rowP=8, swap=0,
@@ -119,6 +120,10 @@ def test_refcount_conservation_random_traces(flavor):
         rng = np.random.default_rng(seed)
         pool, al = _mk(n_pages=33, page_size=ps, max_seqs=max_seqs,
                        rowP=rowP, swap=16, **kinds)
+        # record the whole run so the same invariants can be re-verified
+        # purely from the emitted trace afterwards (DESIGN.md §10)
+        rec = TraceRecorder(clock=lambda: 0.0)
+        al.attach_tracer(rec)
         blocks = []                  # every block ever allocated
         ledger = []                  # pages on the cache ledger
         pinned_by = {}               # ledger page -> mapping live blocks
@@ -262,6 +267,12 @@ def test_refcount_conservation_random_traces(flavor):
         al.release(ledger)
         assert al.pages_in_use == 0
         assert al.free_pages == int(pool.state.free_top) == pool.n_pages - 1
+        # the offline checker replays the recorded events and must agree
+        # that this drained run conserved pages end to end
+        summary = check_trace(rec.events)
+        assert summary["n_blocks"] == len(blocks)
+        assert summary["live_blocks"] == 0 and summary["ledger_pages"] == 0
+        assert summary["swap_pages_held"] == 0
 
 
 def test_swap_out_respects_declared_properties():
