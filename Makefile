@@ -17,14 +17,21 @@
 # BENCH_serving.json::traffic (DESIGN.md §9); it also records one VBI
 # telemetry pass (DESIGN.md §10), re-verifies it with the offline trace
 # checker (`make check-trace`), and lands the metrics-registry snapshot
-# in BENCH_serving.json::traffic.metrics.
+# in BENCH_serving.json::traffic.metrics.  `make bench-serve-disagg`
+# serves the same open-loop machinery through the two-engine
+# prefill/decode topology (DESIGN.md §11): unified vs disaggregated on a
+# long-prompt-heavy mix at two saturated intensities, TTFT p50/p99 and
+# decode tok/s to BENCH_serving.json::disagg, one recorded pass replayed
+# through the multi-pool trace checker (every BlockImage export matched
+# to its import).
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-slow check-vbi-api check-trace bench-serve \
 	bench-serve-prefix bench-serve-swap bench-serve-horizon \
-	bench-serve-window bench-serve-traffic bench serve-demo
+	bench-serve-window bench-serve-traffic bench-serve-disagg bench \
+	serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -60,6 +67,11 @@ bench-serve-window:
 bench-serve-traffic:
 	$(PYTHON) -m benchmarks.bench_traffic --smoke --trace serve_trace.jsonl
 	$(PYTHON) -m repro.serve.telemetry serve_trace.jsonl
+
+bench-serve-disagg:
+	$(PYTHON) -m benchmarks.bench_disagg --smoke \
+	    --trace serve_trace_disagg.jsonl
+	$(PYTHON) -m repro.serve.telemetry serve_trace_disagg.jsonl
 
 # replay a recorded telemetry trace (TRACE=path/to/run.jsonl) against the
 # allocator conservation invariants; add --chrome for a Perfetto view

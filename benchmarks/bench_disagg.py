@@ -1,0 +1,210 @@
+"""Disaggregated prefill/decode serving bench (DESIGN.md §11).
+
+Serves the SAME seeded long-prompt-heavy open-loop workload
+(longdoc / agent / chat, serve/traffic.py::DISAGG_PROFILES) through two
+topologies built from one model:
+
+  * **unified** — the PR-6 baseline: one engine, one scheduler, prefill
+    chunks and decode horizons time-sharing the same slots and pool;
+  * **disagg** — two independently-geometried engines: prompts prefill
+    on a many-slot prompt-sized engine, and at prompt completion each
+    request's exact KV state crosses as a self-describing ``BlockImage``
+    (``VBIAllocator.export_image`` → ``import_image``) to a deeper-pool
+    decode engine with a fused horizon and the host swap tier.
+
+Arrival intensities are calibrated against the unified engine's own
+measured closed-loop capacity; each (intensity, topology) point is
+measured ``reps`` times interleaved and the fastest rep kept (min-of-N).
+Reported per point: TTFT p50/p99, decode tok/s (generated tokens per
+second — exactly what the streaming accountant counts), SLO attainment,
+plus ``outputs_match`` proving both topologies produced the closed-loop
+reference bits.  The headline is the TTFT tail: on a long-prompt-heavy
+mix the unified engine's decode slots queue behind prompt ingestion,
+while the disagg prefill engine chews prompts independently and
+decode-pool pressure stalls only the handoff (DESIGN.md §11).
+
+``--smoke`` writes ``BENCH_serving.json::disagg``; one recorded pass is
+replayed through the offline conservation checker — both pools' event
+streams in one trace, every export matched to its import.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from .bench_lm_serving import write_bench_json
+from .common import emit
+
+
+def bench_disagg(n_requests: int = 24, seed: int = 0,
+                 intensities: "tuple[float, ...]" = (2.0, 4.0),
+                 reps: int = 5,
+                 trace_path: "str | None" = None) -> "tuple[list[str], dict]":
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.disagg import DisaggScheduler
+    from repro.serve.engine import PagedEngine
+    from repro.serve.scheduler import Scheduler
+    from repro.serve.telemetry import Telemetry, check_trace
+    from repro.serve.traffic import (DISAGG_PROFILES, LatencyAccountant,
+                                     TrafficDriver, make_trace)
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    page_size = 8
+    # unified baseline: one engine time-shares prefill and decode
+    uni = PagedEngine(cfg, params, n_pages=33, page_size=page_size,
+                      max_seqs=4, max_pages_per_seq=8, host_swap_pages=32)
+    # disagg: many prefill slots over a prompt-sized pool ...
+    p_eng = PagedEngine(cfg, params, n_pages=31, page_size=page_size,
+                        max_seqs=6, max_pages_per_seq=5)
+    # ... feeding fewer decode slots over a lifetime-sized pool + swap tier
+    d_eng = PagedEngine(cfg, params, n_pages=25, page_size=page_size,
+                        max_seqs=3, max_pages_per_seq=8, host_swap_pages=32)
+    engines = (uni, p_eng, d_eng)
+
+    def mk_unified(telem=None):
+        return Scheduler(uni, prefill_chunk=8, decode_horizon=8,
+                         telemetry=telem)
+
+    def mk_disagg(telem=None):
+        # overlap=True: the decode engine's fused horizon is dispatched
+        # double-buffered (PR 6), so it computes WHILE the next driver
+        # tick runs the prefill engine — the disagg analogue of putting
+        # the two engines on separate accelerators
+        return DisaggScheduler(p_eng, d_eng, prefill_chunk=16,
+                               decode_horizon=8, overlap=True,
+                               telemetry=telem)
+
+    def mk_trace(rate):
+        return make_trace(cfg.vocab, n_requests, rate=rate, seed=seed,
+                          profiles=DISAGG_PROFILES)
+
+    def closed_loop(trace):
+        sched = mk_unified()
+        for tr in trace:
+            sched.add_request(tr.prompt, tr.max_new, rid=tr.rid)
+        t0 = time.perf_counter()
+        fin = sched.run()
+        return time.perf_counter() - t0, {r.rid: r.out for r in fin}
+
+    def open_loop(trace, mk_sched, telem=None):
+        sched = mk_sched(telem)
+        acct = LatencyAccountant(
+            metrics=telem.metrics if telem is not None else None)
+        drv = TrafficDriver(sched, trace, accountant=acct)   # wall clock
+        fin = drv.run()
+        for e in engines:
+            assert e.pages_in_use == 0
+        return {r.rid: r.out for r in fin}, acct, sched
+
+    # -- calibrate against the unified engine's closed-loop capacity --------
+    cal = mk_trace(1e9)                         # rate only shifts arrivals
+    closed_loop(cal)                            # compile/warmup
+    closed_dt, ref_out = closed_loop(cal)
+    base_rate = n_requests / closed_dt
+    for mk in (mk_unified, mk_disagg):          # warm both topologies
+        open_loop(mk_trace(base_rate), mk)
+
+    # -- sweep offered load, unified vs disagg on the same trace ------------
+    runs = {}
+    for x in intensities:
+        rate = base_rate * x
+        trace = mk_trace(rate)                  # same requests, new clock
+        point = {"offered_rate_req_s": rate, "outputs_match": True}
+        best = {"unified": None, "disagg": None}
+        for _ in range(reps):
+            # interleave so thermal/cache drift cannot bias one topology
+            for tag, mk in (("unified", mk_unified), ("disagg", mk_disagg)):
+                out, acct, sched = open_loop(trace, mk)
+                point["outputs_match"] &= out == ref_out
+                # min-of-N on the headline metric: p99 over few dozen
+                # requests is the max sample, so one scheduler-process
+                # hiccup in a rep would otherwise masquerade as a tail
+                tail = acct.summary()["ttft_p99"]
+                if best[tag] is None or tail < best[tag][0]:
+                    best[tag] = (tail, acct, sched)
+        point["unified"], point["disagg"] = \
+            best["unified"][1:], best["disagg"][1:]
+        runs[f"{x:g}x"] = point
+
+    # SLOs track the measured smoke-model speed (same anchoring rule as
+    # bench_traffic: generous multiples of the undersubscribed unified run)
+    anchor = runs[f"{intensities[0]:g}x"]["unified"][0].summary()
+    slo_ttft = 5.0 * anchor["ttft_p50"]
+    slo_tpot = 2.0 * anchor["tpot_p99"]
+
+    # -- one recorded disagg pass at the top intensity (DESIGN.md §10/§11) --
+    telem = Telemetry(trace=True)
+    open_loop(mk_trace(base_rate * intensities[-1]), mk_disagg, telem=telem)
+    for e in engines:                           # engines are shared; detach
+        e.alloc.attach_tracer(None)
+    trace_summary = check_trace(telem.tracer.events)
+    if trace_path:
+        telem.tracer.write_jsonl(trace_path)
+        print(f"# trace: {len(telem.tracer.events)} events -> {trace_path}"
+              f"; checker OK — {trace_summary}")
+
+    results = {"n_requests": n_requests, "seed": seed,
+               "profiles": [p.name for p in DISAGG_PROFILES],
+               "closed_loop_capacity_req_s": base_rate,
+               "slo_ttft_s": slo_ttft, "slo_tpot_s": slo_tpot,
+               "geometry": {
+                   "unified": {"slots": 4, "n_pages": 33},
+                   "prefill": {"slots": 6, "n_pages": 31},
+                   "decode": {"slots": 3, "n_pages": 25}},
+               "trace_check": trace_summary,
+               "intensities": {}}
+    lines = []
+    for key, r in runs.items():
+        entry = {"offered_rate_req_s": r["offered_rate_req_s"],
+                 "outputs_match": r["outputs_match"]}
+        for tag in ("unified", "disagg"):
+            acct, sched = r[tag]
+            s = acct.summary(slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+            s["decode_tok_s"] = s["throughput_tok_s"]
+            if tag == "disagg":
+                s["handoffs"] = sched.stats["handoffs"]
+                s["handoff_bytes"] = sched.stats["handoff_bytes"]
+                s["handoff_stalled_ticks"] = \
+                    sched.stats["handoff_stalled_ticks"]
+                s["decode_preemptions"] = sched.decode.stats["preemptions"]
+                s["decode_swap_ins"] = sched.decode.stats["swap_ins"]
+            entry[tag] = s
+        u, d = entry["unified"], entry["disagg"]
+        entry["ttft_p99_gain"] = u["ttft_p99"] / max(d["ttft_p99"], 1e-9)
+        entry["ttft_p50_gain"] = u["ttft_p50"] / max(d["ttft_p50"], 1e-9)
+        entry["decode_tok_s_ratio"] = (d["decode_tok_s"]
+                                       / max(u["decode_tok_s"], 1e-9))
+        results["intensities"][key] = entry
+        lines.append(emit(
+            f"disagg/{key}",
+            d["ttft_p99"] * 1e6,
+            f"ttft_p99={d['ttft_p99']*1e3:.1f}ms "
+            f"(unified={u['ttft_p99']*1e3:.1f}ms, "
+            f"gain={entry['ttft_p99_gain']:.2f}x) "
+            f"decode_tok_s={d['decode_tok_s']:.1f} "
+            f"(unified={u['decode_tok_s']:.1f}) "
+            f"handoffs={d['handoffs']} "
+            f"match={entry['outputs_match']}"))
+    return lines, results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: writes BENCH_serving.json::disagg")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="OUT.jsonl", default=None,
+                    help="write the recorded disagg run's telemetry trace "
+                         "(both pools' event streams; verify with "
+                         "python -m repro.serve.telemetry)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    n = args.requests if args.smoke or args.requests != 24 else 48
+    lines, results = bench_disagg(n_requests=n, seed=args.seed,
+                                  trace_path=args.trace)
+    write_bench_json({"disagg": results})

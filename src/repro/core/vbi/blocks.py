@@ -42,9 +42,9 @@ import numpy as np
 from .address_space import VBProps
 from .kvcache import (PagedKVManager, admit_slot, aux_swap_charge,
                       clone_page_cow, init_serve_state, make_ring_table,
-                      map_prefix, release_pages, release_slot, restore_aux,
-                      restore_block, retain_pages, snapshot_aux,
-                      snapshot_block)
+                      map_prefix, pad_block_image, release_pages,
+                      release_slot, restore_aux, restore_block, retain_pages,
+                      snapshot_aux, snapshot_block)
 from .mtl import MTL, PhysicalMemory
 
 DEFAULT_BLOCK_PROPS = (VBProps.KV_CACHE | VBProps.EVICTABLE
@@ -67,7 +67,7 @@ class VirtualBlock:
     n_tokens: int = 0
     reserved_pages: int = 0
     shared_pages: int = 0
-    status: str = "resident"            # resident | swapped | freed
+    status: str = "resident"            # resident | swapped | exported | freed
     vbid: int = -1                      # MTL VB id while resident
 
     @property
@@ -175,6 +175,43 @@ class HostSwapTier:
         return sum(_image_nbytes(img) for img in self.images.values())
 
 
+@dataclasses.dataclass
+class BlockImage:
+    """A self-describing, portable snapshot of one request's block — the
+    disaggregated-serving handoff format (DESIGN.md §11).
+
+    This is the swap image promoted to a first-class migration unit: the
+    VBI argument is that a block whose properties travel WITH it can move
+    between memory systems without the consumer re-deriving anything, so
+    the image carries everything a *different* allocator over a
+    *differently-geometried* pool needs to resume the request — token ids,
+    committed length, per-kind K/V / ring / recurrent payloads, the
+    declared :class:`VBProps`, and provenance ``lineage`` (source block,
+    prefix-cache reuse, preemption count) for telemetry.  The only
+    compatibility requirements are the page size and the layer-kind split,
+    both checked at import; pool size, slot count and row width may all
+    differ."""
+    tokens: List[int]                   # committed token ids (prompt + out)
+    n_tokens: int                       # committed length the K/V covers
+    props: VBProps                      # declared properties travel along
+    page_size: int
+    n_pages: int                        # full-pool pages the payload holds
+    charge: int                         # host pages held while in flight
+    k: np.ndarray                       # [n_layers, n_pages, ps, n_kv, hd]
+    v: np.ndarray
+    aux: Optional[tuple] = None         # RING frames + RECURRENT state rows
+    lineage: Optional[dict] = None      # provenance, for telemetry only
+    src_bid: int = -1                   # identity in the exporting allocator
+    src_pool: Optional[str] = None      # exporting tracer's pool label
+
+    @property
+    def nbytes(self) -> int:
+        n = self.k.nbytes + self.v.nbytes
+        if self.aux is not None:
+            n += sum(a.nbytes for a in self.aux)
+        return n
+
+
 class VBIAllocator:
     """The single interface through which KV memory is allocated, shared,
     cloned, pinned, swapped, and released.
@@ -198,13 +235,16 @@ class VBIAllocator:
         # §10) — duck-typed so core/ never imports serve/.  None (the
         # default) keeps every op at one `is None` check of overhead.
         self.tracer = None
+        self.trace_pool = None
         self.stats = {"allocs": 0, "frees": 0, "prefix_maps": 0,
                       "prefix_pages_mapped": 0, "cow_clones": 0,
                       "cached_page_retains": 0, "cached_page_releases": 0,
                       "swap_outs": 0, "swap_ins": 0, "swapped_out_pages": 0,
                       "swapped_in_pages": 0, "swap_rejects": 0,
                       "unreserved_pages": 0, "swap_bytes_out": 0,
-                      "swap_bytes_in": 0}
+                      "swap_bytes_in": 0, "image_exports": 0,
+                      "image_imports": 0, "image_bytes_out": 0,
+                      "image_bytes_in": 0}
 
     # -- telemetry (DESIGN.md §10) -------------------------------------------
     def attach_tracer(self, tracer) -> None:
@@ -212,6 +252,9 @@ class VBIAllocator:
         ``serve.telemetry.TraceRecorder``).  The first event is the pool
         geometry the offline checker replays against."""
         self.tracer = tracer
+        # scoped tracers carry a pool label (DESIGN.md §11); exported
+        # images stamp it so the checker can match import against export
+        self.trace_pool = getattr(tracer, "pool", None)
         if tracer is not None:
             tracer.meta(
                 n_pages=self.pool.n_pages, page_size=self.pool.page_size,
@@ -282,6 +325,11 @@ class VBIAllocator:
         (shared/cache-custody pages survive via refcounts), its reservation
         returns to the mirror.  Double-free is a no-op."""
         if block.status == "freed":
+            return
+        if block.status == "exported":
+            # custody already left with the BlockImage (export_image);
+            # there is nothing here to release
+            block.status = "freed"
             return
         if block.status == "swapped":           # drop the host image
             self.swap.pop(block.bid)
@@ -511,6 +559,102 @@ class VBIAllocator:
         self._trace("swap_in", block, n_pages=img.n_pages, charge=img.charge,
                     reserve=need, bytes=n_bytes, n_tokens=img.n_tokens)
         return block
+
+    # -- block-image handoff (disaggregated serving, DESIGN.md §11) -----------
+    def export_image(self, block: VirtualBlock,
+                     tokens: Optional[Sequence[int]] = None,
+                     lineage: Optional[dict] = None) -> BlockImage:
+        """Detach the block from this pool as a portable
+        :class:`BlockImage`: ONE device gather of its K/V pages (plus the
+        property-typed aux state for RING/RECURRENT stacks), then release
+        the slot and return its reservation to the mirror.  Custody moves
+        entirely to the image — this allocator forgets the block — so the
+        consumer is free to be a different allocator over a different pool
+        (``import_image``).  Mechanically this is ``swap_out`` pointed at a
+        caller-owned image instead of the host tier: migration, not
+        caching."""
+        assert block.status == "resident", "only resident blocks export"
+        n_pages = self.pages_for(block.n_tokens)
+        charge = n_pages + getattr(self.pool, "aux_swap_pages", 0)
+        k, v = snapshot_block(self.pool.state, jnp.int32(block.slot))
+        aux = None
+        if block.props & (VBProps.RING | VBProps.RECURRENT):
+            aux = tuple(np.asarray(a) for a in jax.device_get(snapshot_aux(
+                self.pool.state, jnp.int32(block.slot),
+                self.pool.ring_row(block.slot))))
+        img = BlockImage(
+            tokens=list(tokens) if tokens is not None else [],
+            n_tokens=block.n_tokens,
+            # sharing annotations are pool-local and die at the boundary
+            props=block.props & ~(VBProps.SHARED_RO | VBProps.COW),
+            page_size=self.pool.page_size, n_pages=n_pages, charge=charge,
+            k=np.asarray(jax.device_get(k))[:, :n_pages],
+            v=np.asarray(jax.device_get(v))[:, :n_pages],
+            aux=aux, lineage=lineage, src_bid=block.bid,
+            src_pool=self.trace_pool)
+        self._trace("export_image", block, n_pages=n_pages, charge=charge,
+                    freed_reserved=block.reserved_pages, bytes=img.nbytes,
+                    n_tokens=block.n_tokens)
+        self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
+        self.mtl.disable_vb(0, block.vbid)
+        self.free_pages += block.reserved_pages
+        block.reserved_pages = 0
+        block.shared_pages = 0
+        block.vbid = -1
+        del self.blocks[block.slot]
+        block.slot = -1
+        block.status = "exported"
+        self.stats["image_exports"] += 1
+        self.stats["image_bytes_out"] += img.nbytes
+        return img
+
+    def import_image(self, img: BlockImage, slot: int,
+                     reserve_pages: Optional[int] = None) -> VirtualBlock:
+        """Adopt an exported image onto ``slot`` as a NEW block of this
+        pool: charge the mirror, pop fresh pages, scatter the payload in
+        ONE device dispatch (``restore_block``/``restore_aux``), and stamp
+        this pool's layer-kind properties on top of the declared ones the
+        image carried.  The source and destination pools need only agree
+        on page size and layer kinds — total pages, slot count and row
+        width may all differ (the image is padded to THIS pool's row).
+        ``reserve_pages`` (≥ the image size) is the admission budget, like
+        ``swap_in``."""
+        assert slot not in self.blocks, "slot busy"
+        assert img.page_size == self.pool.page_size, \
+            f"page-size mismatch: image {img.page_size} vs pool " \
+            f"{self.pool.page_size}"
+        kinds = VBProps.RING | VBProps.RECURRENT
+        pool_kinds = getattr(self.pool, "kind_props", VBProps.NONE) & kinds
+        assert (img.props & kinds) == pool_kinds, \
+            "image and destination pool disagree on layer kinds"
+        need = reserve_pages if reserve_pages is not None else img.n_pages
+        assert need >= img.n_pages
+        assert need <= self.free_pages, "KV pool oversubscribed"
+        self.free_pages -= need
+        blk = VirtualBlock(self._next_bid, slot,
+                           (img.props & ~(VBProps.SHARED_RO | VBProps.COW))
+                           | getattr(self.pool, "kind_props", VBProps.NONE))
+        self._next_bid += 1
+        k, v = pad_block_image(img.k, img.v, img.n_pages,
+                               self.pool.max_pages)
+        self.pool.state = restore_block(
+            self.pool.state, jnp.int32(slot), jnp.asarray(k), jnp.asarray(v),
+            jnp.int32(img.n_pages), jnp.int32(img.n_tokens))
+        if img.aux is not None:
+            self.pool.state = restore_aux(
+                self.pool.state, jnp.int32(slot), self.pool.ring_row(slot),
+                *(jnp.asarray(a) for a in img.aux))
+        blk.n_tokens = img.n_tokens
+        blk.reserved_pages = need
+        blk.vbid = self.mtl.enable_vb(0, blk.props)
+        self.blocks[slot] = blk
+        self.stats["image_imports"] += 1
+        self.stats["image_bytes_in"] += img.nbytes
+        self._trace("import_image", blk, n_pages=img.n_pages,
+                    charge=img.charge, reserve=need, bytes=img.nbytes,
+                    n_tokens=img.n_tokens, img_bid=img.src_bid,
+                    img_pool=img.src_pool)
+        return blk
 
 
 class LegacyKVAllocator:

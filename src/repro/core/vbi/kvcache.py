@@ -432,6 +432,24 @@ def restore_block(state: PagedServeState, slot: jax.Array, k_blk: jax.Array,
         page_refcounts=state.page_refcounts.at[dst].set(1, mode="drop"))
 
 
+def pad_block_image(k: np.ndarray, v: np.ndarray, n_pages: int,
+                    max_pages: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a host-side K/V page image (``[n_layers, n_pages, ...]``) to a
+    destination pool's static row width so :func:`restore_block` can
+    scatter it in ONE jitted dispatch.  Shared by swap-in (same-pool
+    restore) and the disaggregated block-image import (cross-pool restore,
+    DESIGN.md §11): the image's geometry is self-describing, so the
+    destination pool only needs the pages to fit one of its rows — its
+    total pool size and slot count may differ freely from the source's."""
+    assert n_pages <= max_pages, \
+        f"image holds {n_pages} pages > destination row width {max_pages}"
+    kp = np.zeros((k.shape[0], max_pages) + k.shape[2:], k.dtype)
+    vp = np.zeros_like(kp)
+    kp[:, :n_pages] = k
+    vp[:, :n_pages] = v
+    return kp, vp
+
+
 @jax.jit
 def snapshot_aux(state: PagedServeState, slot: jax.Array,
                  ring_row: jax.Array) -> Tuple[jax.Array, ...]:

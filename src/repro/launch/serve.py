@@ -37,6 +37,15 @@ double-buffered dispatch in either mode: the host stages horizon N+1
 (admission, reservation, prefix lookup) while the device still runs
 horizon N — same output bits, fewer stalls.
 
+``--disagg`` switches to the disaggregated prefill/decode topology
+(DESIGN.md §11): prompts prefill on a many-slot prefill engine
+(``--prefill-slots``), and at prompt completion each request's exact KV
+state hands off as a self-describing ``BlockImage`` to a separately
+provisioned decode engine (``--decode-slots``, deep horizon, the swap
+tier).  Decode-pool pressure stalls the handoff admission, never the
+prefill engine.  Works with ``--traffic`` and ``--trace`` — the trace
+then carries both pools' event streams, pool-labelled.
+
 ``--trace out.jsonl`` records the VBI telemetry trace (DESIGN.md §10):
 request lifecycle spans, per-tick host timeline, every block op with its
 declared properties, and per-tick occupancy gauges.  The run self-checks
@@ -86,6 +95,19 @@ def main(argv=None) -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode topology (DESIGN.md "
+                         "§11): two independently-geometried engines — "
+                         "prompts prefill on one, a self-describing "
+                         "BlockImage hands each request's exact KV off to "
+                         "the other for decode; decode-pool pressure "
+                         "stalls the handoff, never prefill")
+    ap.add_argument("--prefill-slots", type=int, default=6,
+                    help="prefill-engine slots for --disagg (many slots, "
+                         "prompt-sized pool)")
+    ap.add_argument("--decode-slots", type=int, default=3,
+                    help="decode-engine slots for --disagg (fewer slots, "
+                         "lifetime-sized pool, deep horizon)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=4)
     ap.add_argument("--shared-prefix", type=int, default=0,
@@ -149,6 +171,8 @@ def main(argv=None) -> None:
     if args.legacy and (args.trace or args.metrics):
         ap.error("--trace/--metrics need the jitted engine path "
                  "(drop --legacy)")
+    if args.legacy and args.disagg:
+        ap.error("--disagg needs the jitted engine path (drop --legacy)")
 
     cfg = serve_config(args.arch, args.smoke)
     if args.legacy and (cfg.family not in ("dense", "vlm")
@@ -168,12 +192,30 @@ def main(argv=None) -> None:
         decoded = _run_legacy(cfg, params, prompts, args)
     else:
         page_size = 8
-        engine = PagedEngine(
-            cfg, params, page_size=page_size, max_seqs=args.batch_slots,
-            n_pages=1 + args.batch_slots * (32 + args.shared_prefix
-                                            // page_size),
-            host_swap_pages=args.host_swap_pages,
-            attn_impl=args.attn_impl)
+        p_eng = None
+        if args.disagg:
+            # prefill engine: many slots over a prompt-sized pool; decode
+            # engine: fewer slots, lifetime-sized pool + the swap tier
+            p_eng = PagedEngine(
+                cfg, params, page_size=page_size,
+                max_seqs=args.prefill_slots,
+                n_pages=1 + args.prefill_slots * (8 + args.shared_prefix
+                                                  // page_size),
+                attn_impl=args.attn_impl)
+            engine = PagedEngine(
+                cfg, params, page_size=page_size,
+                max_seqs=args.decode_slots,
+                n_pages=1 + args.decode_slots * (32 + args.shared_prefix
+                                                 // page_size),
+                host_swap_pages=args.host_swap_pages,
+                attn_impl=args.attn_impl)
+        else:
+            engine = PagedEngine(
+                cfg, params, page_size=page_size, max_seqs=args.batch_slots,
+                n_pages=1 + args.batch_slots * (32 + args.shared_prefix
+                                                // page_size),
+                host_swap_pages=args.host_swap_pages,
+                attn_impl=args.attn_impl)
         g = engine.geom
         print(f"[serve] {cfg.name}: layer kinds full={g.n_full} "
               f"ring={g.n_ring} (window={g.window}) rglru={g.n_rg} "
@@ -187,10 +229,22 @@ def main(argv=None) -> None:
             cache = None
         telem = (Telemetry(trace=args.trace is not None)
                  if args.trace or args.metrics else None)
-        sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
-                          prefix_cache=cache,
-                          decode_horizon=args.decode_horizon,
-                          overlap=args.overlap, telemetry=telem)
+        if args.disagg:
+            from ..serve.disagg import DisaggScheduler
+            print(f"[serve] disagg topology: prefill "
+                  f"{args.prefill_slots} slots/{p_eng.n_pages} pages -> "
+                  f"decode {args.decode_slots} slots/{engine.n_pages} "
+                  f"pages (BlockImage handoff, DESIGN.md §11)")
+            sched = DisaggScheduler(p_eng, engine,
+                                    prefill_chunk=args.prefill_chunk,
+                                    decode_horizon=args.decode_horizon,
+                                    overlap=args.overlap,
+                                    prefix_cache=cache, telemetry=telem)
+        else:
+            sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
+                              prefix_cache=cache,
+                              decode_horizon=args.decode_horizon,
+                              overlap=args.overlap, telemetry=telem)
         if args.traffic:
             finished = _run_traffic(cfg, sched, args)
         else:
@@ -203,6 +257,12 @@ def main(argv=None) -> None:
         decoded = (sum(len(r.prompt) + len(r.out) for r in finished)
                    if args.traffic
                    else args.requests * (len(prompts[0]) + args.max_new))
+        if p_eng is not None:
+            print(f"[serve] prefill engine stats {p_eng.stats} "
+                  f"allocator stats {p_eng.alloc.stats}")
+            print(f"[serve] disagg stats {dict(sched.stats)} — "
+                  f"prefill sched {dict(sched.prefill.stats)} / "
+                  f"decode sched {dict(sched.decode.stats)}")
         print(f"[serve] engine stats {engine.stats} "
               f"allocator stats {engine.alloc.stats} "
               f"sched stats {sched.stats}")

@@ -87,7 +87,39 @@ _STAT_KEYS = ("preemptions", "steps", "prefix_hits",
               "swap_ins", "prefill_tokens", "host_syncs",
               "prefill_host_reads", "prefill_reads_skipped",
               "horizon_truncations", "overlap_staged_ticks",
-              "sync_device_ready", "sync_device_wait")
+              "sync_device_ready", "sync_device_wait", "image_imports")
+
+
+def check_request_fits(engine: PagedEngine, alloc, prompt_len: int,
+                       max_new: int, shareable_pages: int = 0) -> None:
+    """Intake impossibility check, shared by the unified scheduler and the
+    disaggregated topology (which checks against the DECODE engine, where
+    the request's full lifetime lives — DESIGN.md §11): refuse now what no
+    schedule could ever place.  Per-kind aware (DESIGN.md §8): only
+    FULL-attention layers consume pool pages, so the checks only bind when
+    the stack has any — a pure RING/RECURRENT stack has bounded/constant
+    footprint and admits any lifetime."""
+    if not engine.has_full:
+        return
+    lifetime = prompt_len + max_new
+    # lifetime length must fit one slot's page-table row — past it the
+    # device scatter would silently drop (KV corruption), so refuse now
+    cap = engine.max_pages * engine.page_size
+    if lifetime > cap:
+        raise ValueError(
+            f"request needs {lifetime} tokens > per-slot capacity "
+            f"{cap} (max_pages_per_seq={engine.max_pages} × "
+            f"page_size={engine.page_size})")
+    # ... and its page budget must fit the pool at all.  Pages the prefix
+    # cache could share cut the budget, so only reject what no amount of
+    # sharing can save (full prompt pages shareable at best).
+    pool = engine.n_pages - 1
+    min_budget = alloc.pages_for(lifetime) + 1 - shareable_pages
+    if min_budget > pool:
+        raise ValueError(
+            f"request needs {min_budget} pages over its lifetime > "
+            f"pool capacity {pool} (n_pages={engine.n_pages} "
+            f"incl. null page) — it can never be scheduled")
 
 
 @dataclasses.dataclass
@@ -100,6 +132,9 @@ class Request:
     # KV demoted to the host swap tier at preemption rides along here and
     # is restored (swap_in) at re-admission
     block: Optional[VirtualBlock] = None
+    # exported BlockImage riding a disagg handoff (DESIGN.md §11): admission
+    # adopts it via import_image instead of prefilling
+    image: Optional[object] = None
 
     @property
     def tokens(self) -> List[int]:
@@ -127,7 +162,8 @@ class Scheduler:
                  block_props: VBProps = DEFAULT_BLOCK_PROPS,
                  decode_horizon: int = 1, overlap: bool = False,
                  on_tokens=None, on_finish=None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 handoff=None):
         if prefix_cache is not None:
             assert prefix_cache.page_size == engine.page_size
             # RING frames are position-recycled and RECURRENT state is not
@@ -148,6 +184,10 @@ class Scheduler:
         self.overlap = overlap
         self.on_tokens = on_tokens        # streaming hooks (serve/traffic.py)
         self.on_finish = on_finish
+        # disagg handoff hook (DESIGN.md §11): called at eviction with
+        # (req, block); returning True means the hook took custody (the
+        # request continues on another engine) — not finished here
+        self.handoff = handoff
         self.queue: Deque[Request] = deque()
         self.slots: Dict[int, _SlotState] = {}
         self.finished: List[Request] = []
@@ -241,35 +281,10 @@ class Scheduler:
     # -- request intake ------------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int,
                     rid: Optional[int] = None) -> int:
-        # Per-kind worst-case footprint (DESIGN.md §8): only FULL-attention
-        # layers consume pool pages, so the intake checks below only bind
-        # when the stack has any — a pure RING/RECURRENT stack (mixtral
-        # SWA, recurrentgemma, mamba2) has bounded/constant footprint and
-        # admits any lifetime.
-        lifetime = len(prompt) + max_new
-        if self.engine.has_full:
-            # lifetime length must fit one slot's page-table row — past it
-            # the device scatter would silently drop (KV corruption), so
-            # refuse now
-            cap = self.engine.max_pages * self.engine.page_size
-            if lifetime > cap:
-                raise ValueError(
-                    f"request needs {lifetime} tokens > per-slot capacity "
-                    f"{cap} (max_pages_per_seq={self.engine.max_pages} × "
-                    f"page_size={self.engine.page_size})")
-            # ... and its page budget must fit the pool at all.  Pages the
-            # prefix cache could share cut the budget, so only reject what
-            # no amount of sharing can save (full prompt pages shareable
-            # at best).
-            pool = self.engine.n_pages - 1
-            shareable = (len(prompt) // self.engine.page_size
-                         if self.prefix_cache is not None else 0)
-            min_budget = self.alloc.pages_for(lifetime) + 1 - shareable
-            if min_budget > pool:
-                raise ValueError(
-                    f"request needs {min_budget} pages over its lifetime > "
-                    f"pool capacity {pool} (n_pages={self.engine.n_pages} "
-                    f"incl. null page) — it can never be scheduled")
+        shareable = (len(prompt) // self.engine.page_size
+                     if self.prefix_cache is not None else 0)
+        check_request_fits(self.engine, self.alloc, len(prompt), max_new,
+                           shareable_pages=shareable)
         rid = self._next_rid if rid is None else rid
         self._next_rid = max(self._next_rid, rid) + 1
         req = Request(rid, list(prompt), max_new)
@@ -358,6 +373,10 @@ class Scheduler:
     def _admit_loop(self, free_slots: List[int]) -> None:
         while self.queue and free_slots:
             req = self.queue[0]
+            if req.image is not None:
+                if not self._admit_image(req, free_slots):
+                    break
+                continue
             if req.block is not None:
                 if not self._admit_swapped(req, free_slots):
                     break
@@ -428,9 +447,39 @@ class Scheduler:
                      restored_tokens=st.fed, budget_pages=budget)
         return True
 
+    def _admit_image(self, req: Request, free_slots: List[int]) -> bool:
+        """Adopt a handed-off BlockImage (disagg, DESIGN.md §11): budget
+        the full span like any admission, then scatter the image's exact
+        KV into a fresh block of THIS pool — no re-prefill.  Returning
+        False applies backpressure at the handoff boundary: the image
+        waits at the queue head while the exporter keeps prefilling."""
+        budget = self._degraded_budget(req)
+        if budget > self.alloc.free_pages:
+            return False
+        self.queue.popleft()
+        slot = free_slots.pop(0)
+        img, req.image = req.image, None
+        blk = self.alloc.import_image(img, slot, reserve_pages=budget)
+        # fed = the committed tokens the image covered; anything past them
+        # (the handoff's first decode token) feeds through the prefill path
+        st = _SlotState(req, blk, prefill_len=len(req.tokens),
+                        fed=blk.n_tokens, admit_seq=self._admit_seq)
+        self._admit_seq += 1
+        self.slots[slot] = st
+        self.stats["image_imports"] += 1
+        self._req_ev("admit", req, slot=slot, bid=blk.bid, resume="image",
+                     restored_tokens=st.fed, budget_pages=budget)
+        return True
+
     def _evict(self, slot: int) -> None:
         st = self.slots.pop(slot)
         self._unpin(st)
+        if self.handoff is not None and self.handoff(st.req, st.block):
+            # custody moved with the export (disagg handoff): the request
+            # continues on another engine — not finished here
+            self._req_ev("handoff", st.req, slot=slot,
+                         n_out=len(st.req.out))
+            return
         self.alloc.free(st.block)
         self.finished.append(st.req)
         self._req_ev("finish", st.req, slot=slot, n_out=len(st.req.out),

@@ -390,6 +390,59 @@ class TraceRecorder:
         with open(path, "w") as f:
             json.dump(self.chrome_trace(), f)
 
+    def scoped(self, pool: str) -> "_ScopedTracer":
+        """A view of this recorder that stamps ``pool=<label>`` on every
+        event it emits.  The disaggregated topology (DESIGN.md §11) gives
+        each engine's allocator a scoped view so one trace file holds both
+        engines' event streams and :func:`check_trace` can replay each
+        pool's conservation invariants separately — and match block-image
+        exports against their imports across pools."""
+        return _ScopedTracer(self, pool)
+
+
+class _ScopedTracer:
+    """Pool-labelled proxy over a :class:`TraceRecorder` (one per engine
+    in a disaggregated run).  Duck-type-compatible with the recorder for
+    everything the allocator and scheduler emit."""
+
+    __slots__ = ("_rec", "pool")
+
+    def __init__(self, rec: TraceRecorder, pool: str) -> None:
+        self._rec = rec
+        self.pool = pool
+
+    @property
+    def events(self) -> List[dict]:
+        return self._rec.events
+
+    def now(self) -> float:
+        return self._rec.now()
+
+    def emit(self, type: str, **fields) -> None:
+        fields.setdefault("pool", self.pool)
+        self._rec.emit(type, **fields)
+
+    def meta(self, **fields) -> None:
+        self.emit("meta", **fields)
+
+    def block_op(self, op: str, **fields) -> None:
+        self.emit("block", op=op, **fields)
+
+    def req_event(self, ev: str, rid: int, **fields) -> None:
+        self.emit("req", ev=ev, rid=rid, **fields)
+
+    def gauge_sample(self, tick: int, values: Dict[str, float]) -> None:
+        self.emit("gauge", tick=tick, values=dict(values))
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args):
+        args.setdefault("pool", self.pool)
+        with self._rec.span(name, **args) as ext:
+            yield ext
+
+    def write_jsonl(self, path: str) -> None:
+        self._rec.write_jsonl(path)
+
 
 def read_jsonl(path: str) -> List[dict]:
     with open(path) as f:
@@ -409,6 +462,17 @@ class Telemetry:
         self.metrics = MetricsRegistry()
         self.tracer: Optional[TraceRecorder] = (
             TraceRecorder(clock) if trace else None)
+
+    def scoped(self, pool: str) -> "Telemetry":
+        """Per-engine view for the disaggregated topology (DESIGN.md §11):
+        a FRESH metrics registry — two schedulers sharing one registry
+        would collide on their ``sched.*`` counter names — whose trace
+        events land in the SAME underlying recorder, tagged
+        ``pool=<label>``."""
+        sub = Telemetry()
+        if self.tracer is not None:
+            sub.tracer = self.tracer.scoped(pool)
+        return sub
 
 
 # --------------------------------------------------------------------------
@@ -441,22 +505,45 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
         charge its swap-out paid, the tier never exceeds its capacity,
         and a drained run ends with zero pages held everywhere.
 
+    A trace may hold SEVERAL pools' event streams (the disaggregated
+    topology records both engines through pool-scoped tracer views,
+    DESIGN.md §11): every event carries an optional ``pool`` label, each
+    pool replays its own mirror/ledger/tier against its own meta geometry,
+    and block-image handoffs are matched across pools — an export charges
+    custody out of its pool, the matching import (same source pool + bid,
+    same charge) charges it into the destination, and a drained run must
+    leave no image in flight.
+
     Returns a summary dict (event/block/op counts, peak occupancy).
     Raises :class:`TraceCheckError` on the first violation."""
-    meta = next((e for e in events if e.get("type") == "meta"
-                 and "n_pages" in e), None)
-    if meta is None:
+    metas: Dict[object, dict] = {}          # pool label -> first geometry meta
+    for e in events:
+        if e.get("type") == "meta" and "n_pages" in e:
+            metas.setdefault(e.get("pool"), e)
+    if not metas:
         raise TraceCheckError("no pool meta event: nothing to check against")
-    n_pages = int(meta["n_pages"])
-    swap_cap = int(meta.get("swap_capacity", 0))
-    free = n_pages - 1                      # page 0 is the null page
-    ledger = 0                              # pages on the cache ledger
-    tier_used = 0
-    blocks: Dict[int, dict] = {}            # bid -> {status, reserved, charge}
+    pools: Dict[object, dict] = {}
+    for label, meta in metas.items():
+        n_pages = int(meta["n_pages"])
+        pools[label] = {
+            "n_pages": n_pages,
+            "swap_cap": int(meta.get("swap_capacity", 0)),
+            "free": n_pages - 1,            # page 0 is the null page
+            "ledger": 0,                    # pages on the cache ledger
+            "tier_used": 0,
+            "blocks": {},                   # bid -> {status, reserved, charge}
+            "peak": 0,
+        }
+    inflight: Dict[tuple, int] = {}         # (src pool, src bid) -> charge
     n_ops = 0
-    peak = 0
     for i, ev in enumerate(events):
+        label = ev.get("pool")
         if ev.get("type") == "gauge":
+            st = pools.get(label)
+            if st is None:
+                _fail(i, ev, f"gauge for unknown pool {label!r}")
+            free = st["free"]
+            tier_used = st["tier_used"]
             vals = ev.get("values", {})
             if "alloc.free_pages" in vals \
                     and int(vals["alloc.free_pages"]) != free:
@@ -470,6 +557,12 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
             continue
         if ev.get("type") != "block":
             continue
+        st = pools.get(label)
+        if st is None:
+            _fail(i, ev, f"block op for unknown pool {label!r}")
+        n_pages = st["n_pages"]
+        swap_cap = st["swap_cap"]
+        blocks = st["blocks"]
         n_ops += 1
         op = ev["op"]
         bid = ev.get("bid")
@@ -479,7 +572,7 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
                 _fail(i, ev, f"bid {bid} allocated twice")
             blocks[bid] = {"status": "resident", "reserved": 0, "charge": 0}
         elif op in ("reserve", "unreserve", "commit", "map_shared",
-                    "cow_break", "swap_out", "free"):
+                    "cow_break", "swap_out", "export_image", "free"):
             if blk is None:
                 _fail(i, ev, f"op on unknown bid {bid}")
             if op == "free":
@@ -487,13 +580,13 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
                 if was == "freed":
                     _fail(i, ev, f"bid {bid} freed twice")
                 if was == "swapped":
-                    tier_used -= blk["charge"]
+                    st["tier_used"] -= blk["charge"]
                 else:
                     if int(ev["freed_reserved"]) != blk["reserved"]:
                         _fail(i, ev, f"free returned "
                               f"{ev['freed_reserved']} pages but replayed "
                               f"reservation is {blk['reserved']}")
-                    free += blk["reserved"]
+                    st["free"] += blk["reserved"]
                 blk.update(status="freed", reserved=0, charge=0)
             elif blk["status"] != "resident":
                 _fail(i, ev, f"{op} on {blk['status']} bid {bid}")
@@ -501,7 +594,7 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
                 grow = int(ev["grow"])
                 if grow <= 0:
                     _fail(i, ev, "non-positive reservation growth")
-                free -= grow
+                st["free"] -= grow
                 blk["reserved"] += grow
                 if blk["reserved"] != int(ev["reserved"]):
                     _fail(i, ev, f"reservation total {ev['reserved']} "
@@ -511,7 +604,7 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
                 if not 0 < ret <= blk["reserved"]:
                     _fail(i, ev, f"returning {ret} of {blk['reserved']} "
                           f"reserved pages")
-                free += ret
+                st["free"] += ret
                 blk["reserved"] -= ret
                 if blk["reserved"] != int(ev["reserved"]):
                     _fail(i, ev, f"reservation total {ev['reserved']} "
@@ -522,23 +615,51 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
                 if freed != blk["reserved"]:
                     _fail(i, ev, f"swap-out freed {freed} but replayed "
                           f"reservation is {blk['reserved']}")
-                free += freed
-                tier_used += charge
+                st["free"] += freed
+                st["tier_used"] += charge
                 blk.update(status="swapped", reserved=0, charge=charge)
+            elif op == "export_image":
+                # custody leaves the pool entirely: the reservation comes
+                # home, the charge rides with the in-flight image until a
+                # matching import claims it in some pool
+                freed = int(ev["freed_reserved"])
+                if freed != blk["reserved"]:
+                    _fail(i, ev, f"export freed {freed} but replayed "
+                          f"reservation is {blk['reserved']}")
+                st["free"] += freed
+                inflight[(label, bid)] = int(ev["charge"])
+                blk.update(status="exported", reserved=0, charge=0)
             # commit / map_shared / cow_break: placement metadata only —
             # mirror motion for them happens via reserve/retain events
         elif op == "swap_in":
             if blk is None or blk["status"] != "swapped":
                 _fail(i, ev, f"swap-in of non-swapped bid {bid}")
             need = int(ev["reserve"])
-            if need > free:
-                _fail(i, ev, f"swap-in reserves {need} > {free} free")
+            if need > st["free"]:
+                _fail(i, ev, f"swap-in reserves {need} > {st['free']} free")
             if int(ev["charge"]) != blk["charge"]:
                 _fail(i, ev, f"swap-in releases charge {ev['charge']} but "
                       f"swap-out paid {blk['charge']}")
-            free -= need
-            tier_used -= blk["charge"]
+            st["free"] -= need
+            st["tier_used"] -= blk["charge"]
             blk.update(status="resident", reserved=need, charge=0)
+        elif op == "import_image":
+            if blk is not None and blk["status"] != "freed":
+                _fail(i, ev, f"bid {bid} allocated twice")
+            key = (ev.get("img_pool"), ev.get("img_bid"))
+            if key not in inflight:
+                _fail(i, ev, f"import of never-exported image "
+                      f"(pool {key[0]!r}, bid {key[1]})")
+            if int(ev["charge"]) != inflight[key]:
+                _fail(i, ev, f"import claims charge {ev['charge']} but "
+                      f"export paid {inflight[key]}")
+            del inflight[key]
+            need = int(ev["reserve"])
+            if need > st["free"]:
+                _fail(i, ev, f"import reserves {need} > {st['free']} free")
+            st["free"] -= need
+            blocks[bid] = {"status": "resident", "reserved": need,
+                           "charge": 0}
         elif op == "retain":
             n = int(ev["n_pages"])
             fb = ev.get("from_bid")
@@ -550,40 +671,61 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
                     _fail(i, ev, f"retain moves {n} pages but bid {fb} "
                           f"reserves only {src['reserved']}")
                 src["reserved"] -= n
-            ledger += n
+            st["ledger"] += n
         elif op == "release":
             n = int(ev["n_pages"])
-            if n > ledger:
-                _fail(i, ev, f"releasing {n} ledger pages, only {ledger} "
-                      f"retained")
-            ledger -= n
-            free += n
+            if n > st["ledger"]:
+                _fail(i, ev, f"releasing {n} ledger pages, only "
+                      f"{st['ledger']} retained")
+            st["ledger"] -= n
+            st["free"] += n
         else:
             _fail(i, ev, f"unknown block op {op!r}")
-        if not 0 <= free <= n_pages - 1:
-            _fail(i, ev, f"mirror out of range: free={free} "
+        if not 0 <= st["free"] <= n_pages - 1:
+            _fail(i, ev, f"mirror out of range: free={st['free']} "
                   f"(pool {n_pages - 1})")
-        if not 0 <= tier_used <= max(swap_cap, 0):
-            _fail(i, ev, f"swap tier out of range: used={tier_used} "
+        if not 0 <= st["tier_used"] <= max(swap_cap, 0):
+            _fail(i, ev, f"swap tier out of range: used={st['tier_used']} "
                   f"(capacity {swap_cap})")
-        peak = max(peak, n_pages - 1 - free)
-    live = [b for b in blocks.values() if b["status"] != "freed"]
-    reserved = sum(b["reserved"] for b in live if b["status"] == "resident")
-    if free != n_pages - 1 - reserved - ledger:
+        st["peak"] = max(st["peak"], n_pages - 1 - st["free"])
+    n_blocks = n_live = ledger_total = tier_total = peak_total = 0
+    all_drained = True
+    for label, st in pools.items():
+        tag = f" (pool {label})" if label is not None else ""
+        live = [b for b in st["blocks"].values()
+                if b["status"] not in ("freed", "exported")]
+        reserved = sum(b["reserved"] for b in live
+                       if b["status"] == "resident")
+        if st["free"] != st["n_pages"] - 1 - reserved - st["ledger"]:
+            raise TraceCheckError(
+                f"leaked pages at end of trace{tag}: free={st['free']}, "
+                f"but {reserved} reserved + {st['ledger']} on ledger of "
+                f"{st['n_pages'] - 1}")
+        if not live and st["ledger"] == 0:
+            if st["tier_used"] != 0:
+                raise TraceCheckError(
+                    f"swap charge asymmetric{tag}: {st['tier_used']} "
+                    f"pages still held by a drained run")
+            if st["free"] != st["n_pages"] - 1:
+                raise TraceCheckError(
+                    f"drained run leaked pages{tag}: free={st['free']} "
+                    f"of {st['n_pages'] - 1}")
+        else:
+            all_drained = False
+        n_blocks += len(st["blocks"])
+        n_live += len(live)
+        ledger_total += st["ledger"]
+        tier_total += st["tier_used"]
+        peak_total += st["peak"]
+    if all_drained and inflight:
         raise TraceCheckError(
-            f"leaked pages at end of trace: free={free}, but "
-            f"{reserved} reserved + {ledger} on ledger of {n_pages - 1}")
-    if not live and ledger == 0:
-        if tier_used != 0:
-            raise TraceCheckError(f"swap charge asymmetric: {tier_used} "
-                                  f"pages still held by a drained run")
-        if free != n_pages - 1:
-            raise TraceCheckError(f"drained run leaked pages: free={free} "
-                                  f"of {n_pages - 1}")
+            f"{len(inflight)} exported block image(s) never imported "
+            f"by a drained run: {sorted(inflight)}")
     return {"n_events": len(events), "n_block_ops": n_ops,
-            "n_blocks": len(blocks), "live_blocks": len(live),
-            "ledger_pages": ledger, "swap_pages_held": tier_used,
-            "peak_pages_used": peak}
+            "n_blocks": n_blocks, "live_blocks": n_live,
+            "ledger_pages": ledger_total, "swap_pages_held": tier_total,
+            "peak_pages_used": peak_total, "n_pools": len(pools),
+            "images_in_flight": len(inflight)}
 
 
 def main(argv=None) -> int:

@@ -74,6 +74,16 @@ SUMMARIZE = ScenarioProfile("summarize", 1.0, (12, 20), (6, 10))
 
 MIXED_PROFILES: Tuple[ScenarioProfile, ...] = (CHAT, RAG, AGENT, SUMMARIZE)
 
+#: long-document ingestion: the prompt dominates, decode is short — on a
+#: unified engine these monopolize prefill chunks and inflate everyone
+#: else's TTFT; on the disagg topology they live on the prefill engine
+LONGDOC = ScenarioProfile("longdoc", 5.0, (16, 28), (4, 8))
+
+#: the disagg bench mix (DESIGN.md §11): long-prompt-heavy ingestion
+#: interleaved with long decoders (agent) and latency-sensitive chat —
+#: the regime where splitting prefill from decode pays
+DISAGG_PROFILES: Tuple[ScenarioProfile, ...] = (LONGDOC, AGENT, CHAT)
+
 
 @dataclasses.dataclass(frozen=True)
 class TimedRequest:
@@ -289,7 +299,13 @@ class TrafficDriver:
     ready for it.  Streaming token/finish callbacks are timestamped into
     the accountant; with the double-buffered scheduler (``overlap=True``)
     the arrival pump and admission staging for horizon N+1 happen while
-    the device is still running horizon N."""
+    the device is still running horizon N.
+
+    Any object with the scheduler duck type works — including the
+    two-engine :class:`~repro.serve.disagg.DisaggScheduler`, whose
+    ``step()`` ticks BOTH engines once per driver tick, so under a
+    :class:`VirtualClock` the prefill/decode interleave (and with it the
+    whole replay) is as deterministic as the unified engine's."""
 
     def __init__(self, sched, trace: Sequence[TimedRequest],
                  clock=None, accountant: Optional[LatencyAccountant] = None):

@@ -1,0 +1,300 @@
+"""Disaggregated prefill/decode serving (DESIGN.md §11).
+
+  * BlockImage round-trip is a pool-level property: export from one
+    allocator, adopt on another with DIFFERENT geometry (total pages,
+    slot count, row width), re-export — payload bit-exact, for uniform,
+    hetero (full+RING+RECURRENT) and no-full-layer stacks;
+  * the import guards hold: page-size and layer-kind disagreement are
+    rejected, custody is terminal at export;
+  * a two-engine :class:`DisaggScheduler` run replays bit-identical to
+    the unified engine on the same seeded open-loop trace (virtual
+    clock), across a uniform GQA stack and the recurrentgemma hybrid —
+    including a decode pool tight enough to force preemption into the
+    host swap tier on the decode side;
+  * backpressure is asymmetric: a starved decode engine stalls handoff
+    admission (counted), never prompt ingestion, and everything still
+    finishes with the reference bits;
+  * the recorded two-pool trace replays through the offline checker,
+    and a tampered trace — a dropped export, a falsified import charge —
+    is rejected.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vbi.blocks import PagePool, VBIAllocator
+from repro.core.vbi.kvcache import reserve_positions
+from repro.launch.serve import serve_config
+from repro.models.model import init_params
+from repro.serve.disagg import DisaggScheduler
+from repro.serve.engine import PagedEngine
+from repro.serve.scheduler import Scheduler
+from repro.serve.telemetry import (Telemetry, TraceCheckError, TraceRecorder,
+                                   check_trace)
+from repro.serve.traffic import TrafficDriver, VirtualClock, make_trace
+
+
+# --------------------------------------------------------------------------
+# pool-level: BlockImage round-trip across geometries
+# --------------------------------------------------------------------------
+def _mk(n_pages=17, page_size=2, max_seqs=2, rowP=8, swap=0,
+        n_layers=1, ring=0, rg=0):
+    pool = PagePool(n_layers=n_layers, n_pages=n_pages, page_size=page_size,
+                    n_kv=1, head_dim=2, max_seqs=max_seqs,
+                    max_pages_per_seq=rowP, ring_layers=ring, ring_pages=2,
+                    rg_layers=rg, rnn_width=4)
+    return pool, VBIAllocator(pool, host_swap_pages=swap)
+
+
+def _feed(pool, al, blk, n=1):
+    for _ in range(n):
+        al.reserve(blk, blk.n_tokens + 1)
+        mask = np.zeros((pool.max_seqs,), bool)
+        mask[blk.slot] = True
+        pool.state, _ = reserve_positions(pool.state, jnp.asarray(mask),
+                                          has_full=pool.has_full)
+        al.commit(blk, blk.n_tokens + 1)
+
+
+def _randomize(pool, rng):
+    """Fill every KV / aux array with noise so a round-trip comparison
+    actually exercises the payload, not just zeros."""
+    st = pool.state
+    repl = {}
+    for f in ("k_pages", "v_pages", "k_ring", "v_ring",
+              "rg_h", "rg_conv", "ssm_state", "ssm_conv"):
+        a = getattr(st, f)
+        if a.size:
+            repl[f] = jnp.asarray(rng.standard_normal(a.shape), a.dtype)
+    pool.state = dataclasses.replace(st, **repl)
+
+
+KINDS = {"uniform": dict(),
+         "hetero": dict(ring=2, rg=1),
+         "ring-recurrent": dict(n_layers=0, ring=2, rg=1)}
+
+
+@pytest.mark.parametrize("flavor", sorted(KINDS))
+def test_block_image_round_trip_cross_geometry(flavor):
+    """Export → adopt on a smaller pool with a narrower row and more
+    slots → re-export: the image is self-describing, so nothing about the
+    destination's geometry leaks into the payload."""
+    kinds = KINDS[flavor]
+    src_pool, src = _mk(n_pages=17, max_seqs=2, rowP=8, **kinds)
+    dst_pool, dst = _mk(n_pages=9, max_seqs=4, rowP=4, **kinds)
+    rng = np.random.default_rng(0)
+    blk = src.alloc(1)
+    _feed(src_pool, src, blk, 7)                 # 4 pages @ ps=2
+    _randomize(src_pool, rng)
+
+    img = src.export_image(blk, tokens=list(range(7)),
+                           lineage={"hop": 1})
+    # custody is terminal: the source forgets the block, pages and all
+    assert blk.status == "exported" and src.pages_in_use == 0
+    assert img.n_tokens == 7 and img.tokens == list(range(7))
+    assert img.n_pages == (4 if src_pool.has_full else 0)
+    assert (img.aux is not None) == bool(kinds.get("ring") or
+                                         kinds.get("rg"))
+    src.free(blk)                                # custody no-op post-export
+    assert src.free_pages == src_pool.n_pages - 1
+
+    blk2 = dst.import_image(img, 3)              # new slot, new block
+    assert blk2.n_tokens == 7 and blk2 is not blk
+    assert dst.blocks[3] is blk2 and blk2.status == "resident"
+    img2 = dst.export_image(blk2, tokens=img.tokens, lineage={"hop": 2})
+    np.testing.assert_array_equal(img.k, img2.k)
+    np.testing.assert_array_equal(img.v, img2.v)
+    if img.aux is not None:
+        for a, b in zip(img.aux, img2.aux):
+            np.testing.assert_array_equal(a, b)
+    assert img2.props == img.props and img2.charge == img.charge
+    assert dst.pages_in_use == 0
+
+    blk3 = src.import_image(img2, 0)             # ... and home again
+    src.free(blk3)
+    assert src.free_pages == src_pool.n_pages - 1
+    assert src.stats["image_exports"] == src.stats["image_imports"] == 1
+
+
+def test_import_image_guards():
+    src_pool, src = _mk()
+    blk = src.alloc(0)
+    _feed(src_pool, src, blk, 3)
+    img = src.export_image(blk)
+    _, wrong_ps = _mk(page_size=4)
+    with pytest.raises(AssertionError, match="page-size mismatch"):
+        wrong_ps.import_image(img, 0)
+    _, wrong_kind = _mk(ring=2, rg=1)
+    with pytest.raises(AssertionError, match="layer kinds"):
+        wrong_kind.import_image(img, 0)
+    with pytest.raises(AssertionError, match="only resident"):
+        src.export_image(blk)                    # custody already moved
+    _, home = _mk(n_pages=5, rowP=4)             # 4 free pages
+    with pytest.raises(AssertionError, match="oversubscribed"):
+        home.import_image(img, 0, reserve_pages=5)
+    home.free(home.import_image(img, 0))         # within budget: lands
+    assert home.free_pages == 4
+
+
+def test_cross_pool_trace_checks_and_tamper_detected():
+    """One recorder, two pool-scoped tracer views: the offline checker
+    replays both pools and matches the export to its import; a trace with
+    the export dropped, or the import's charge falsified, is rejected."""
+    rec = TraceRecorder(clock=lambda: 0.0)
+    src_pool, src = _mk(ring=1, rg=1)
+    dst_pool, dst = _mk(n_pages=9, max_seqs=4, rowP=4, ring=1, rg=1)
+    src.attach_tracer(rec.scoped("prefill"))
+    dst.attach_tracer(rec.scoped("decode"))
+    blk = src.alloc(0)
+    _feed(src_pool, src, blk, 5)
+    blk2 = dst.import_image(src.export_image(blk), 2)
+    dst.free(blk2)
+    summary = check_trace(rec.events)
+    assert summary["n_pools"] == 2 and summary["images_in_flight"] == 0
+    assert summary["live_blocks"] == 0
+
+    no_export = [e for e in rec.events
+                 if e.get("op") != "export_image"]
+    with pytest.raises(TraceCheckError, match="never-exported"):
+        check_trace(no_export)
+    tampered = [dict(e) for e in rec.events]
+    for e in tampered:
+        if e.get("op") == "import_image":
+            e["charge"] = int(e["charge"]) + 1
+    with pytest.raises(TraceCheckError, match="claims charge"):
+        check_trace(tampered)
+
+
+# --------------------------------------------------------------------------
+# engine-level: two-engine topology replays the unified engine's bits
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stacks():
+    out = {}
+    for i, arch in enumerate(("qwen3-0.6b", "recurrentgemma-9b")):
+        cfg = serve_config(arch)
+        out[arch] = (cfg, init_params(cfg, jax.random.key(i)))
+    return out
+
+
+def _closed_ref(cfg, params, trace, page_size=8):
+    eng = PagedEngine(cfg, params, n_pages=33, page_size=page_size,
+                      max_seqs=4, max_pages_per_seq=8)
+    sched = Scheduler(eng, prefill_chunk=8, decode_horizon=8)
+    for tr in trace:
+        sched.add_request(tr.prompt, tr.max_new, rid=tr.rid)
+    return {r.rid: r.out for r in sched.run()}
+
+
+def _mk_disagg(cfg, params, p_kw=None, d_kw=None, **sch_kw):
+    p = dict(n_pages=25, page_size=8, max_seqs=6, max_pages_per_seq=4)
+    d = dict(n_pages=33, page_size=8, max_seqs=3, max_pages_per_seq=8,
+             host_swap_pages=32)
+    p.update(p_kw or {})
+    d.update(d_kw or {})
+    p_eng = PagedEngine(cfg, params, **p)
+    d_eng = PagedEngine(cfg, params, **d)
+    sch_kw.setdefault("prefill_chunk", 8)
+    sch_kw.setdefault("decode_horizon", 8)
+    return p_eng, d_eng, DisaggScheduler(p_eng, d_eng, **sch_kw)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "recurrentgemma-9b"])
+def test_disagg_replay_matches_unified(stacks, arch):
+    """The §11 acceptance: crossing the handoff boundary changes no
+    output bits — the decode engine's first fed token is the prompt
+    argmax the prefill engine already emitted, and greedy decode is
+    schedule-invariant from there.  Holds for the hetero hybrid too:
+    the image carries the ring frames and recurrent rows."""
+    cfg, params = stacks[arch]
+    trace = make_trace(cfg.vocab, n_requests=8, rate=1.0, seed=3,
+                       max_prompt=12, max_new_cap=8)
+    ref = _closed_ref(cfg, params, trace)
+    p_eng, d_eng, dsch = _mk_disagg(cfg, params)
+    drv = TrafficDriver(dsch, trace, clock=VirtualClock())
+    out = {r.rid: r.out for r in drv.run()}
+    assert out == ref, f"{arch}: disagg replay diverged"
+    assert dsch.stats["handoffs"] > 0
+    assert dsch.stats["handoffs"] + dsch.stats["direct_finishes"] \
+        == len(trace)
+    assert p_eng.alloc.stats["image_exports"] == dsch.stats["handoffs"]
+    assert d_eng.alloc.stats["image_imports"] == dsch.stats["handoffs"]
+    assert p_eng.pages_in_use == 0 and d_eng.pages_in_use == 0
+
+
+def test_disagg_exact_under_decode_preemption_and_swap(stacks):
+    """Decode-side pressure: the decode pool cannot hold every adopted
+    request's lifetime, so imported blocks get preempted into the decode
+    engine's host swap tier and resumed — still bit-exact end to end."""
+    cfg, params = stacks["qwen3-0.6b"]
+    trace = make_trace(cfg.vocab, n_requests=8, rate=2.0, seed=9,
+                       max_prompt=8, max_new_cap=12)
+    ref = _closed_ref(cfg, params, trace, page_size=4)
+    p_eng, d_eng, dsch = _mk_disagg(
+        cfg, params,
+        p_kw=dict(page_size=4, n_pages=13, max_seqs=4, max_pages_per_seq=3),
+        d_kw=dict(page_size=4, n_pages=8, max_seqs=4, max_pages_per_seq=5,
+                  host_swap_pages=16))
+    drv = TrafficDriver(dsch, trace, clock=VirtualClock())
+    out = {r.rid: r.out for r in drv.run()}
+    assert out == ref
+    assert dsch.decode.stats["preemptions"] >= 1     # pressure was real
+    assert dsch.decode.stats["swap_ins"] >= 1
+    assert p_eng.pages_in_use == 0 and d_eng.pages_in_use == 0
+    assert d_eng.alloc.swap.used_pages == 0          # tier drained
+
+
+def test_backpressure_stalls_handoff_not_prefill(stacks):
+    """A starved decode engine (one slot) parks handoff images at its
+    queue head; the stall is counted, prompt ingestion continues, and
+    every request still finishes with the reference bits."""
+    cfg, params = stacks["qwen3-0.6b"]
+    trace = make_trace(cfg.vocab, n_requests=8, rate=5.0, seed=2,
+                       max_prompt=12, max_new_cap=8)
+    ref = _closed_ref(cfg, params, trace)
+    p_eng, d_eng, dsch = _mk_disagg(cfg, params, d_kw=dict(max_seqs=1))
+    drv = TrafficDriver(dsch, trace, clock=VirtualClock())
+    out = {r.rid: r.out for r in drv.run()}
+    assert out == ref
+    assert dsch.stats["handoff_stalled_ticks"] > 0
+    assert p_eng.pages_in_use == 0 and d_eng.pages_in_use == 0
+
+
+def test_direct_finish_skips_the_handoff(stacks):
+    """max_new=1 is satisfied by the prompt argmax on the prefill engine:
+    no image, no decode-engine involvement at all."""
+    cfg, params = stacks["qwen3-0.6b"]
+    p_eng, d_eng, dsch = _mk_disagg(cfg, params)
+    rng = np.random.default_rng(0)
+    dsch.add_request(rng.integers(0, cfg.vocab, 6).tolist(), max_new=1)
+    fin = dsch.run()
+    assert len(fin) == 1 and len(fin[0].out) == 1
+    assert dsch.stats["direct_finishes"] == 1
+    assert dsch.stats["handoffs"] == 0
+    assert d_eng.alloc.stats["image_imports"] == 0
+    # intake is checked against the DECODE geometry, where lifetimes live
+    with pytest.raises(ValueError, match="per-slot capacity"):
+        dsch.add_request(rng.integers(0, cfg.vocab, 12).tolist(),
+                         max_new=64)
+
+
+def test_disagg_two_pool_trace_replays_clean(stacks):
+    """End-to-end recording across both engines: one trace, two pool
+    labels, every export matched to its import, both pools drained."""
+    cfg, params = stacks["qwen3-0.6b"]
+    trace = make_trace(cfg.vocab, n_requests=6, rate=1.0, seed=7,
+                       max_prompt=12, max_new_cap=8)
+    telem = Telemetry(trace=True)
+    p_eng, d_eng, dsch = _mk_disagg(cfg, params, telemetry=telem)
+    drv = TrafficDriver(dsch, trace, clock=VirtualClock())
+    drv.run()
+    p_eng.alloc.attach_tracer(None)
+    d_eng.alloc.attach_tracer(None)
+    summary = check_trace(telem.tracer.events)
+    assert summary["n_pools"] == 2
+    assert summary["images_in_flight"] == 0
+    assert summary["live_blocks"] == 0 and summary["ledger_pages"] == 0
+    assert summary["swap_pages_held"] == 0

@@ -128,6 +128,7 @@ def test_refcount_conservation_random_traces(flavor):
         ledger = []                  # pages on the cache ledger
         pinned_by = {}               # ledger page -> mapping live blocks
         staged = {}                  # bid -> (blk, n0, k): in-flight horizon
+        images = []                  # exported BlockImages in flight (§11)
         for _ in range(70):
             # the overlap protocol (DESIGN.md §9): a block whose horizon is
             # staged/in flight is untouched by every other lifecycle op
@@ -141,7 +142,8 @@ def test_refcount_conservation_random_traces(flavor):
             op = rng.choice(["alloc", "feed", "horizon_feed", "cache_insert",
                              "map_shared", "cow", "release_cache",
                              "swap_out", "swap_in", "free", "double_free",
-                             "stage_ahead", "arrive"])
+                             "stage_ahead", "arrive",
+                             "handoff_out", "handoff_in"])
             if op == "alloc" and free_slots:
                 blocks.append(al.alloc(int(rng.choice(free_slots))))
             elif op == "feed" and quiet:
@@ -222,6 +224,25 @@ def test_refcount_conservation_random_traces(flavor):
                 blk = swapped[rng.integers(len(swapped))]
                 if al.pages_for(blk.n_tokens) <= al.free_pages:
                     al.swap_in(blk, int(rng.choice(free_slots)))
+            elif op == "handoff_out" and quiet:
+                # the disagg handoff boundary (DESIGN.md §11): custody
+                # leaves the pool entirely — the export is terminal for
+                # this block and its pages serve other requests while
+                # the image is in flight toward a consumer
+                blk = quiet[rng.integers(len(quiet))]
+                images.append(al.export_image(
+                    blk, tokens=list(range(blk.n_tokens))))
+                for bids in pinned_by.values():
+                    bids.discard(blk.bid)
+            elif op == "handoff_in" and images and free_slots:
+                # ... and the consumer side, landing on the SAME pool
+                # here (cross-pool adoption is tests/test_disagg.py):
+                # a new bid, charged like any admission
+                img = images[rng.integers(len(images))]
+                if img.n_pages <= al.free_pages:
+                    images.remove(img)
+                    blocks.append(al.import_image(
+                        img, int(rng.choice(free_slots))))
             elif op == "stage_ahead" and quiet:
                 # overlap staging (DESIGN.md §9): the worst-case K-token
                 # span is charged to the mirror while the (simulated)
@@ -261,10 +282,16 @@ def test_refcount_conservation_random_traces(flavor):
                     al.free(blk)                 # must stay a no-op
                     assert int(pool.state.free_top) == top
             _conservation(pool, al, blocks, ledger)
-        # drain everything: the pool must come back whole
+        # drain everything: the pool must come back whole — freeing an
+        # exported block is a custody no-op, and in-flight images land
+        # (new bids) before retiring so the trace shows none in flight
         for blk in blocks:
             al.free(blk)
         al.release(ledger)
+        for img in images:
+            blk = al.import_image(img, 0)
+            blocks.append(blk)
+            al.free(blk)
         assert al.pages_in_use == 0
         assert al.free_pages == int(pool.state.free_top) == pool.n_pages - 1
         # the offline checker replays the recorded events and must agree
@@ -273,6 +300,7 @@ def test_refcount_conservation_random_traces(flavor):
         assert summary["n_blocks"] == len(blocks)
         assert summary["live_blocks"] == 0 and summary["ledger_pages"] == 0
         assert summary["swap_pages_held"] == 0
+        assert summary["images_in_flight"] == 0
 
 
 def test_swap_out_respects_declared_properties():
@@ -443,7 +471,10 @@ def test_raw_page_ops_gated_to_core_vbi():
     ``write_token_kv``, ``fused_decode_scan``) are additionally gated to
     ``serve/engine.py``: scheduler, benchmarks and everything else must go
     through the engine + allocator, so horizon code cannot grow a side
-    channel around the reservation protocol."""
+    channel around the reservation protocol.  The migration boundary
+    (DESIGN.md §11) is gated the same way: ``export_image`` /
+    ``import_image`` may be called only from ``serve/`` — BlockImages
+    cross pools through the serving schedulers, nowhere else."""
     root = pathlib.Path(__file__).resolve().parent.parent
     # every raw PagedServeState lifecycle op, incl. the RING/RECURRENT aux
     # snapshot/restore pair (DESIGN.md §8)
@@ -454,6 +485,8 @@ def test_raw_page_ops_gated_to_core_vbi():
     # the jitted fast path: owned by the engine, and ONLY the engine
     fast_pat = re.compile(
         r"\b(reserve_positions|write_token_kv|fused_decode_scan)\b")
+    # the handoff boundary: only serving schedulers move BlockImages
+    img_pat = re.compile(r"\.(export_image|import_image)\s*\(")
     bad = []
     for base in ("src/repro", "benchmarks"):
         for p in sorted((root / base).rglob("*.py")):
@@ -463,6 +496,8 @@ def test_raw_page_ops_gated_to_core_vbi():
             for i, line in enumerate(p.read_text().splitlines(), 1):
                 if pat.search(line) or (
                         fast_pat.search(line)
-                        and rel != "src/repro/serve/engine.py"):
+                        and rel != "src/repro/serve/engine.py") or (
+                        img_pat.search(line)
+                        and not rel.startswith("src/repro/serve/")):
                     bad.append(f"{rel}:{i}: {line.strip()}")
     assert not bad, "raw page ops outside core/vbi/:\n" + "\n".join(bad)
