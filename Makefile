@@ -23,15 +23,23 @@
 # long-prompt-heavy mix at two saturated intensities, TTFT p50/p99 and
 # decode tok/s to BENCH_serving.json::disagg, one recorded pass replayed
 # through the multi-pool trace checker (every BlockImage export matched
-# to its import).
+# to its import).  `make bench-serve-chaos` runs the fault-plane sweep
+# (DESIGN.md §12): the disagg topology under seeded fault injection at
+# three intensities — outputs must stay bit-identical to the fault-free
+# reference, every injected fault must resolve (retry_ok / fallback /
+# accounted shed; the extended trace checker fails silent drops), and
+# goodput-under-SLO degradation lands in BENCH_serving.json::faults.
+# The `check-vbi-api` gate also pins the fault plane's one door:
+# attach_faults is reachable only via serve/faults.py::install_faults,
+# and snapshot_image/drop_image only from serve/.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-slow check-vbi-api check-trace bench-serve \
 	bench-serve-prefix bench-serve-swap bench-serve-horizon \
-	bench-serve-window bench-serve-traffic bench-serve-disagg bench \
-	serve-demo
+	bench-serve-window bench-serve-traffic bench-serve-disagg \
+	bench-serve-chaos bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -46,7 +54,8 @@ check-vbi-api:
 	    || { $(PYTHON) -m pytest -q \
 	         tests/test_vbi_blocks.py::test_raw_page_ops_gated_to_core_vbi; \
 	         exit 1; }; \
-	echo "check-vbi-api: OK (all page lifecycle goes through VBIAllocator)"
+	echo "check-vbi-api: OK (all page lifecycle goes through VBIAllocator;" \
+	     "fault hooks only via serve/faults.py)"
 
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_lm_serving --smoke
@@ -72,6 +81,11 @@ bench-serve-disagg:
 	$(PYTHON) -m benchmarks.bench_disagg --smoke \
 	    --trace serve_trace_disagg.jsonl
 	$(PYTHON) -m repro.serve.telemetry serve_trace_disagg.jsonl
+
+bench-serve-chaos:
+	$(PYTHON) -m benchmarks.bench_chaos --smoke \
+	    --trace serve_trace_chaos.jsonl
+	$(PYTHON) -m repro.serve.telemetry serve_trace_chaos.jsonl
 
 # replay a recorded telemetry trace (TRACE=path/to/run.jsonl) against the
 # allocator conservation invariants; add --chrome for a Perfetto view

@@ -1,0 +1,188 @@
+"""Chaos-tested serving: the fault plane under open-loop load (DESIGN.md §12).
+
+Serves the SAME seeded open-loop workload (the disagg mix) through the
+two-engine prefill/decode topology while a seeded
+:class:`~repro.serve.faults.FaultPlan` injects faults at every VBI
+boundary — transient alloc exhaustion, swap I/O failures, block-image
+loss and corruption in the handoff transit, poisoned decode-horizon
+dispatches — at a sweep of per-boundary firing rates.
+
+What the sweep proves, per intensity:
+
+  * ``outputs_match=True`` — every request's tokens are bit-identical to
+    the fault-free closed-loop reference: all recovery paths (bounded
+    retry, re-prefill, discard-preemption, skip-tick) are output-exact;
+  * **zero unaccounted faults** — the recorded pass replays through the
+    extended offline checker, which fails any injected fault not matched
+    by a ``recover`` event (retry-success, clean fallback, or accounted
+    shed): silent drops are structurally impossible;
+  * **graceful degradation** — goodput-under-SLO and TTFT tails degrade
+    smoothly with fault intensity (the retries cost latency, never
+    correctness); retry/fallback/shed counts quantify the recovery work.
+
+Fault rates come from a flat per-boundary probability by default, or —
+``--fault-model simdram:node=22`` — from the thesis's SIMDRAM activation
+reliability model (``core/reliability.py``), scaled by the sweep
+intensity.  ``--smoke`` writes ``BENCH_serving.json::faults``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from .bench_lm_serving import write_bench_json
+from .common import emit
+
+
+def bench_chaos(n_requests: int = 24, seed: int = 0, fault_seed: int = 7,
+                intensities: "tuple[float, ...]" = (0.02, 0.05, 0.1),
+                fault_model: "str | None" = None,
+                trace_path: "str | None" = None) -> "tuple[list[str], dict]":
+    from repro.launch.serve import serve_config
+    from repro.models.model import init_params
+    from repro.serve.disagg import DisaggScheduler
+    from repro.serve.engine import PagedEngine
+    from repro.serve.faults import FaultPlan, install_faults, simdram_rates
+    from repro.serve.scheduler import Scheduler
+    from repro.serve.telemetry import Telemetry, check_trace
+    from repro.serve.traffic import (DISAGG_PROFILES, LatencyAccountant,
+                                     TrafficDriver, make_trace)
+
+    cfg = serve_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.key(0))
+    page_size = 8
+    p_eng = PagedEngine(cfg, params, n_pages=31, page_size=page_size,
+                        max_seqs=6, max_pages_per_seq=5)
+    d_eng = PagedEngine(cfg, params, n_pages=25, page_size=page_size,
+                        max_seqs=3, max_pages_per_seq=8, host_swap_pages=32)
+    engines = (p_eng, d_eng)
+
+    def mk_plan(x):
+        """Fresh plan per run, SAME fault seed: the rate-independent
+        streams make a higher intensity fire a superset of a lower one's
+        draws over identical traffic."""
+        if x <= 0:
+            return None
+        if fault_model:
+            return FaultPlan(simdram_rates(fault_model, scale=x),
+                             seed=fault_seed)
+        return FaultPlan(x, seed=fault_seed)
+
+    def mk_sched(plan, telem=None):
+        return DisaggScheduler(p_eng, d_eng, prefill_chunk=16,
+                               decode_horizon=8, overlap=True,
+                               telemetry=telem, faults=plan)
+
+    def mk_trace(rate):
+        return make_trace(cfg.vocab, n_requests, rate=rate, seed=seed,
+                          profiles=DISAGG_PROFILES)
+
+    def closed_loop(trace):
+        sched = Scheduler(d_eng, prefill_chunk=8, decode_horizon=8)
+        for tr in trace:
+            sched.add_request(tr.prompt, tr.max_new, rid=tr.rid)
+        t0 = time.perf_counter()
+        fin = sched.run()
+        return time.perf_counter() - t0, {r.rid: r.out for r in fin}
+
+    def open_loop(trace, plan, telem=None, slo_ttft=None):
+        sched = mk_sched(plan, telem)
+        acct = LatencyAccountant(
+            metrics=telem.metrics if telem is not None else None)
+        drv = TrafficDriver(sched, trace, accountant=acct,
+                            slo_ttft=slo_ttft)
+        fin = drv.run()
+        for e in engines:
+            assert e.pages_in_use == 0, "pages leaked across a chaos run"
+            install_faults(e.alloc, None)     # detach the plan
+        return {r.rid: r.out for r in fin}, acct, sched
+
+    # -- calibrate + fault-free anchor ---------------------------------------
+    cal = mk_trace(1e9)
+    closed_loop(cal)                           # compile/warmup
+    closed_dt, ref_out = closed_loop(cal)
+    base_rate = n_requests / closed_dt
+    rate = base_rate * 2.0                     # sustained oversubscription
+    trace = mk_trace(rate)
+    open_loop(trace, None)                     # warm the topology
+    _, acct0, _ = open_loop(trace, None)
+    anchor = acct0.summary()
+    slo_ttft = 5.0 * anchor["ttft_p50"]
+    slo_tpot = 2.0 * anchor["tpot_p99"]
+
+    results = {"n_requests": n_requests, "seed": seed,
+               "fault_seed": fault_seed,
+               "fault_model": fault_model or "flat",
+               "offered_rate_req_s": rate,
+               "slo_ttft_s": slo_ttft, "slo_tpot_s": slo_tpot,
+               "intensities": {}}
+    lines = []
+    sweep = (0.0,) + tuple(intensities)
+    for x in sweep:
+        plan = mk_plan(x)
+        out, acct, sched = open_loop(trace, plan, slo_ttft=slo_ttft)
+        s = acct.summary(slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+        entry = {"fault_rate": x,
+                 "outputs_match": out == ref_out,
+                 "goodput_req_s": s["goodput_req_s"],
+                 "slo_attainment": s["slo_attainment"],
+                 "ttft_p99": s["ttft_p99"], "tpot_p99": s["tpot_p99"],
+                 "n_shed": s["n_shed"]}
+        if plan is not None:
+            ps = plan.stats
+            entry["faults_fired"] = ps["fired"]
+            entry["resolved"] = ps["resolved"]
+            entry["faults_unresolved"] = ps["unresolved"]
+            assert ps["unresolved"] == 0, "chaos run left faults dangling"
+        assert entry["outputs_match"], \
+            f"fault intensity {x} changed output bits"
+        results["intensities"][f"{x:g}"] = entry
+        lines.append(emit(
+            f"chaos/{x:g}",
+            s["ttft_p99"] * 1e6,
+            f"goodput={s['goodput_req_s']:.2f}req/s "
+            f"slo_att={s['slo_attainment']:.2f} "
+            f"fired={sum(entry.get('faults_fired', {}).values())} "
+            f"retry_ok={entry.get('resolved', {}).get('retry_ok', 0)} "
+            f"fallback={entry.get('resolved', {}).get('fallback', 0)} "
+            f"shed={s['n_shed']} match={entry['outputs_match']}"))
+
+    # -- one recorded pass at the top intensity through the extended checker -
+    telem = Telemetry(trace=True)
+    plan = mk_plan(sweep[-1])
+    out, _, _ = open_loop(trace, plan, telem=telem, slo_ttft=slo_ttft)
+    for e in engines:
+        e.alloc.attach_tracer(None)
+    trace_summary = check_trace(telem.tracer.events)
+    assert trace_summary["faults_unresolved"] == 0
+    assert out == ref_out
+    results["trace_check"] = trace_summary
+    if trace_path:
+        telem.tracer.write_jsonl(trace_path)
+        print(f"# trace: {len(telem.tracer.events)} events -> {trace_path}"
+              f"; checker OK — {trace_summary}")
+    return lines, results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: writes BENCH_serving.json::faults")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-seed", type=int, default=7)
+    ap.add_argument("--fault-model", default=None,
+                    help="rate source, e.g. simdram:node=22 "
+                         "(core/reliability.py); default flat rates")
+    ap.add_argument("--trace", metavar="OUT.jsonl", default=None,
+                    help="write the recorded chaos run's telemetry trace "
+                         "(verify with python -m repro.serve.telemetry)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    lines, results = bench_chaos(n_requests=args.requests, seed=args.seed,
+                                 fault_seed=args.fault_seed,
+                                 fault_model=args.fault_model,
+                                 trace_path=args.trace)
+    write_bench_json({"faults": results})

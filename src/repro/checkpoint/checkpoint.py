@@ -1,7 +1,16 @@
 """Fault-tolerant checkpointing.
 
-* **Atomic**: write to ``step_N.tmp`` then ``os.replace`` → a crash mid-save
-  never corrupts the latest checkpoint.
+* **Atomic**: every file is written to a ``.tmp`` name and renamed, the
+  manifest is written last, and the whole step directory lands via one
+  ``os.replace`` of ``step_N.tmp`` → ``step_N`` — a crash at ANY point
+  mid-save leaves either the previous checkpoint or a ``.tmp`` directory
+  that readers ignore, never a torn ``step_N``.
+* **Corruption-tolerant**: :func:`latest_step` validates each candidate
+  (manifest parses, every leaf file loads and matches its recorded
+  shape/dtype) and silently skips damaged steps — so
+  ``CheckpointManager.restore_latest`` falls back to the newest intact
+  step.  :func:`restore_pytree` on an explicitly-requested damaged step
+  raises :class:`CheckpointCorruptError` naming the broken file.
 * **Async**: device→host transfer happens synchronously (cheap), file IO on
   a background thread so the train loop isn't blocked.
 * **Mesh-agnostic (elastic)**: leaves are stored unsharded (host arrays) +
@@ -18,10 +27,18 @@ import os
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step is partial or damaged (unparseable manifest,
+    missing/truncated leaf, shape or dtype mismatch).  Raised only when
+    that step was *explicitly* requested; the discovery path
+    (:func:`latest_step`) skips damaged steps instead, so restores fall
+    back to the previous intact one."""
 
 
 def _flatten(tree):
@@ -50,11 +67,18 @@ def save_pytree(tree, directory: str | Path, step: int,
         manifest = {"step": step, "leaves": []}
         for i, (key, arr) in enumerate(host_leaves):
             fn = f"leaf_{i}.npy"
-            np.save(tmp / fn, arr)
+            # temp-then-rename per leaf: even inside the .tmp dir no file
+            # is ever observable half-written (the final os.replace of the
+            # directory is the real commit point; this keeps partial state
+            # out of crash-dump inspection too)
+            np.save(tmp / (fn + ".tmp"), arr)
+            os.replace(tmp / (fn + ".tmp.npy"), tmp / fn)
             manifest["leaves"].append(
                 {"key": key, "file": fn, "shape": list(arr.shape),
                  "dtype": str(arr.dtype)})
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # manifest last: its presence asserts every leaf preceding it
+        (tmp / "manifest.json.tmp").write_text(json.dumps(manifest))
+        os.replace(tmp / "manifest.json.tmp", tmp / "manifest.json")
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -66,7 +90,35 @@ def save_pytree(tree, directory: str | Path, step: int,
     return t
 
 
+def _validate_step(directory: Path) -> Optional[str]:
+    """None if the step directory is intact, else a description of the
+    first problem found (unparseable manifest, missing/truncated leaf,
+    shape/dtype mismatch vs the manifest)."""
+    try:
+        manifest = json.loads((directory / "manifest.json").read_text())
+    except (OSError, ValueError) as e:
+        return f"manifest unreadable: {e}"
+    for e in manifest.get("leaves", []):
+        path = directory / e["file"]
+        try:
+            # mmap validates the npy header AND that the file really holds
+            # shape*itemsize bytes — a mid-file truncation fails here
+            # without reading the payload
+            arr = np.load(path, mmap_mode="r")
+        except (OSError, ValueError, EOFError) as err:
+            # EOFError: a zero-byte leaf (crash before any bytes landed)
+            return f"leaf {e['file']} unreadable/truncated: {err}"
+        if list(arr.shape) != list(e["shape"]) \
+                or str(arr.dtype) != e["dtype"]:
+            return (f"leaf {e['file']} mismatches manifest: "
+                    f"{arr.shape}/{arr.dtype} vs {e['shape']}/{e['dtype']}")
+    return None
+
+
 def latest_step(directory: str | Path) -> Optional[int]:
+    """Newest INTACT step: damaged/partial candidates are skipped (with a
+    warning on stderr) so a crash mid-save or on-disk corruption degrades
+    to the previous checkpoint instead of a failed restore."""
     directory = Path(directory)
     if not directory.exists():
         return None
@@ -76,15 +128,43 @@ def latest_step(directory: str | Path) -> Optional[int]:
                 and not p.name.endswith(".tmp") \
                 and (p / "manifest.json").exists():
             steps.append(int(p.name.split("_")[1]))
-    return max(steps) if steps else None
+    for step in sorted(steps, reverse=True):
+        problem = _validate_step(directory / f"step_{step}")
+        if problem is None:
+            return step
+        import sys
+        print(f"checkpoint: skipping corrupt step_{step} ({problem})",
+              file=sys.stderr)
+    return None
+
+
+def load_leaves(directory: str | Path, step: int) -> Dict[str, np.ndarray]:
+    """Template-free restore: the step's leaves as ``{key: array}``.  For
+    consumers whose tree structure is data-dependent (the serve
+    crash-recovery snapshots in ``serve/recovery.py`` hold one entry per
+    in-flight request) and so cannot supply a static template.  Same
+    corruption contract as :func:`restore_pytree`."""
+    step_dir = Path(directory) / f"step_{step}"
+    problem = _validate_step(step_dir)
+    if problem is not None:
+        raise CheckpointCorruptError(f"step_{step}: {problem}")
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    return {e["key"]: np.load(step_dir / e["file"])
+            for e in manifest["leaves"]}
 
 
 def restore_pytree(template, directory: str | Path, step: int,
                    shardings=None) -> Any:
     """Restore into the structure of ``template``; optionally device_put
-    with per-leaf shardings (elastic resharding)."""
-    directory = Path(directory) / f"step_{step}"
-    manifest = json.loads((directory / "manifest.json").read_text())
+    with per-leaf shardings (elastic resharding).  Raises
+    :class:`CheckpointCorruptError` — naming the damaged file — if the
+    requested step is partial/corrupt, so callers can fall back to
+    ``latest_step`` (which already skips damaged steps)."""
+    step_dir = Path(directory) / f"step_{step}"
+    problem = _validate_step(step_dir)
+    if problem is not None:
+        raise CheckpointCorruptError(f"step_{step}: {problem}")
+    manifest = json.loads((step_dir / "manifest.json").read_text())
     by_key = {e["key"]: e for e in manifest["leaves"]}
     leaves, treedef = _flatten(template)
     sh_leaves = None
@@ -94,7 +174,7 @@ def restore_pytree(template, directory: str | Path, step: int,
     out = []
     for i, (key, leaf) in enumerate(leaves):
         e = by_key[key]
-        arr = np.load(directory / e["file"])
+        arr = np.load(step_dir / e["file"])
         assert list(arr.shape) == list(leaf.shape), \
             f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}"
         if sh_leaves is not None:
@@ -131,7 +211,7 @@ class CheckpointManager:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
 
     def restore_latest(self, template, shardings=None):
-        step = latest_step(self.dir)
+        step = latest_step(self.dir)       # skips corrupt steps
         if step is None:
             return None, None
         self.wait()

@@ -33,6 +33,7 @@ here and in ``kvcache.py``.  See DESIGN.md §6.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -41,10 +42,10 @@ import numpy as np
 
 from .address_space import VBProps
 from .kvcache import (PagedKVManager, admit_slot, aux_swap_charge,
-                      clone_page_cow, init_serve_state, make_ring_table,
-                      map_prefix, pad_block_image, release_pages,
-                      release_slot, restore_aux, restore_block, retain_pages,
-                      snapshot_aux, snapshot_block)
+                      clone_page_cow, init_serve_state, kv_payload_checksum,
+                      make_ring_table, map_prefix, pad_block_image,
+                      release_pages, release_slot, restore_aux, restore_block,
+                      retain_pages, snapshot_aux, snapshot_block)
 from .mtl import MTL, PhysicalMemory
 
 DEFAULT_BLOCK_PROPS = (VBProps.KV_CACHE | VBProps.EVICTABLE
@@ -200,9 +201,10 @@ class BlockImage:
     k: np.ndarray                       # [n_layers, n_pages, ps, n_kv, hd]
     v: np.ndarray
     aux: Optional[tuple] = None         # RING frames + RECURRENT state rows
-    lineage: Optional[dict] = None      # provenance, for telemetry only
+    lineage: Optional[dict] = None      # provenance + the idempotency key
     src_bid: int = -1                   # identity in the exporting allocator
     src_pool: Optional[str] = None      # exporting tracer's pool label
+    checksum: Optional[int] = None      # CRC over tokens + pages + aux
 
     @property
     def nbytes(self) -> int:
@@ -210,6 +212,37 @@ class BlockImage:
         if self.aux is not None:
             n += sum(a.nbytes for a in self.aux)
         return n
+
+    def compute_checksum(self) -> int:
+        """Integrity digest over everything a consumer would trust: the
+        K/V page payload + aux state (``kv_payload_checksum``) chained
+        with the token ids and the custody metadata (committed length,
+        page count, charge, declared props, page size) — so a bit-flipped
+        payload AND a falsified charge both fail :meth:`verify`."""
+        crc = kv_payload_checksum(self.k, self.v, self.aux)
+        meta = np.asarray(list(self.tokens)
+                          + [self.n_tokens, self.n_pages, self.charge,
+                             int(self.props), self.page_size], np.int64)
+        return zlib.crc32(meta.tobytes(), crc) & 0xFFFFFFFF
+
+    def verify(self) -> bool:
+        """True iff the image carries a checksum and it matches the
+        payload.  ``import_image`` rejects sealed images that fail this —
+        a corrupt block must never be adopted (DESIGN.md §12)."""
+        return (self.checksum is not None
+                and self.compute_checksum() == self.checksum)
+
+
+class ImageIntegrityError(AssertionError):
+    """A sealed :class:`BlockImage` failed its integrity checksum at
+    import.  Not retryable — the payload itself is damaged, so the only
+    exact recovery is to drop the image (``drop_image``) and re-prefill
+    the request from its tokens.  ``fault_id`` links the rejection back
+    to the injected fault when a FaultPlan caused the damage."""
+
+    def __init__(self, msg: str, fault_id: Optional[int] = None):
+        super().__init__(msg)
+        self.fault_id = fault_id
 
 
 class VBIAllocator:
@@ -236,6 +269,15 @@ class VBIAllocator:
         # default) keeps every op at one `is None` check of overhead.
         self.tracer = None
         self.trace_pool = None
+        # fault plan (serve/faults.py, DESIGN.md §12) — same duck-typed
+        # hook shape as the tracer; None keeps every boundary at one
+        # `is None` check.  Attached ONLY via serve.faults.install_faults.
+        self.faults = None
+        # idempotent-import ledger: (src_pool, src_bid, lineage) of every
+        # image adopted and still resident, so a retransmitted handoff
+        # re-import returns the live block instead of double-allocating
+        self._imports: Dict[tuple, VirtualBlock] = {}
+        self._import_keys: Dict[int, tuple] = {}    # bid -> ledger key
         self.stats = {"allocs": 0, "frees": 0, "prefix_maps": 0,
                       "prefix_pages_mapped": 0, "cow_clones": 0,
                       "cached_page_retains": 0, "cached_page_releases": 0,
@@ -244,7 +286,8 @@ class VBIAllocator:
                       "unreserved_pages": 0, "swap_bytes_out": 0,
                       "swap_bytes_in": 0, "image_exports": 0,
                       "image_imports": 0, "image_bytes_out": 0,
-                      "image_bytes_in": 0}
+                      "image_bytes_in": 0, "image_imports_deduped": 0,
+                      "image_drops": 0, "image_snapshots": 0}
 
     # -- telemetry (DESIGN.md §10) -------------------------------------------
     def attach_tracer(self, tracer) -> None:
@@ -272,6 +315,22 @@ class VBIAllocator:
             fields.setdefault("slot", blk.slot)
             fields["props"] = int(blk.props)
         t.block_op(op, **fields)
+
+    # -- fault plane (serve/faults.py, DESIGN.md §12) -------------------------
+    def attach_faults(self, faults) -> None:
+        """Park a fault plan on this allocator (None detaches).  Do not
+        call directly: ``serve.faults.install_faults`` is the only caller
+        the ``make check-vbi-api`` gate allows, keeping the injection
+        surface in one module."""
+        self.faults = faults
+
+    def _fault_point(self, kind: str, **ctx) -> None:
+        """One boundary crossing of fault class ``kind``: consults the
+        plan (which may raise a ``TransientFault``) BEFORE the boundary op
+        mutates anything, so every injected fault leaves the allocator in
+        the exact pre-call state and a retry is always safe."""
+        if self.faults is not None:
+            self.faults.check(kind, tracer=self.tracer, **ctx)
 
     # -- geometry / budget ---------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -335,8 +394,10 @@ class VBIAllocator:
             self.swap.pop(block.bid)
             block.status = "freed"
             self.stats["frees"] += 1
+            self._forget_import(block)
             self._trace("free", block, freed_reserved=0, was="swapped")
             return
+        self._forget_import(block)
         self._trace("free", block, freed_reserved=block.reserved_pages,
                     was="resident")
         self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
@@ -356,6 +417,7 @@ class VBIAllocator:
         concurrent prefills can never oversubscribe the free stack."""
         if n_pages > block.reserved_pages:
             grow = n_pages - block.reserved_pages
+            self._fault_point("alloc", bid=block.bid, grow=grow)
             assert grow <= self.free_pages, "KV pool oversubscribed"
             self.free_pages -= grow
             block.reserved_pages = n_pages
@@ -488,6 +550,7 @@ class VBIAllocator:
         if not self.swap.can_hold(charge):
             self.stats["swap_rejects"] += 1
             return False
+        self._fault_point("swap_out", bid=block.bid, n_pages=n_pages)
         k, v = snapshot_block(self.pool.state, jnp.int32(block.slot))
         aux = None
         if block.props & (VBProps.RING | VBProps.RECURRENT):
@@ -514,6 +577,7 @@ class VBIAllocator:
         del self.blocks[block.slot]
         block.slot = -1
         block.status = "swapped"
+        self._forget_import(block)
         self.stats["swap_outs"] += 1
         self.stats["swapped_out_pages"] += n_pages
         return True
@@ -526,6 +590,7 @@ class VBIAllocator:
         mirror up front, like any admission budget."""
         assert block.status == "swapped", "block is not swapped out"
         assert slot not in self.blocks, "slot busy"
+        self._fault_point("swap_in", bid=block.bid)
         img = self.swap.pop(block.bid)
         need = reserve_pages if reserve_pages is not None else img.n_pages
         assert need >= img.n_pages
@@ -592,6 +657,9 @@ class VBIAllocator:
             v=np.asarray(jax.device_get(v))[:, :n_pages],
             aux=aux, lineage=lineage, src_bid=block.bid,
             src_pool=self.trace_pool)
+        # seal the image: the importer verifies this digest before adoption,
+        # so transit corruption is rejected, never silently decoded against
+        img.checksum = img.compute_checksum()
         self._trace("export_image", block, n_pages=n_pages, charge=charge,
                     freed_reserved=block.reserved_pages, bytes=img.nbytes,
                     n_tokens=block.n_tokens)
@@ -604,8 +672,74 @@ class VBIAllocator:
         del self.blocks[block.slot]
         block.slot = -1
         block.status = "exported"
+        self._forget_import(block)
         self.stats["image_exports"] += 1
         self.stats["image_bytes_out"] += img.nbytes
+        return img
+
+    # -- idempotent-import ledger (DESIGN.md §12) -----------------------------
+    @staticmethod
+    def _image_key(img: BlockImage) -> Optional[tuple]:
+        """The idempotency identity of an image: (source pool, source bid,
+        frozen lineage).  None — no retransmission protection — for images
+        with no source identity (hand-built test images)."""
+        if img.src_bid < 0:
+            return None
+        lin = (tuple(sorted((str(k), str(v)) for k, v in img.lineage.items()))
+               if isinstance(img.lineage, dict) else None)
+        return (img.src_pool, img.src_bid, lin)
+
+    def _forget_import(self, block: VirtualBlock) -> None:
+        """Close the block's retransmission window: once an imported block
+        leaves residency (free / swap-out / re-export), a re-arriving copy
+        of its source image is a new import, not a duplicate delivery."""
+        key = self._import_keys.pop(block.bid, None)
+        if key is not None:
+            self._imports.pop(key, None)
+
+    def drop_image(self, img: BlockImage) -> None:
+        """Surrender custody of an in-flight image WITHOUT importing it —
+        the accounting half of the corrupt/lost-image fallback: the
+        request re-prefills from its tokens, and this op tells the trace
+        (and the offline checker's export/import matching) that the image
+        did not vanish silently."""
+        self.stats["image_drops"] += 1
+        self._trace("drop_image", img_bid=img.src_bid,
+                    img_pool=img.src_pool, charge=img.charge)
+
+    def snapshot_image(self, block: VirtualBlock,
+                       tokens: Optional[Sequence[int]] = None,
+                       lineage: Optional[dict] = None) -> BlockImage:
+        """Non-destructive :meth:`export_image`: gather the block's exact
+        state into a sealed :class:`BlockImage` while the block STAYS
+        resident and custody never moves — the crash-recovery checkpoint
+        unit (serve/recovery.py, DESIGN.md §12).  The image is stamped
+        external provenance (``lineage["snapshot"]``) so a post-restart
+        import doesn't claim an in-trace export that never happened."""
+        assert block.status == "resident", "only resident blocks snapshot"
+        n_pages = self.pages_for(block.n_tokens)
+        charge = n_pages + getattr(self.pool, "aux_swap_pages", 0)
+        k, v = snapshot_block(self.pool.state, jnp.int32(block.slot))
+        aux = None
+        if block.props & (VBProps.RING | VBProps.RECURRENT):
+            aux = tuple(np.asarray(a) for a in jax.device_get(snapshot_aux(
+                self.pool.state, jnp.int32(block.slot),
+                self.pool.ring_row(block.slot))))
+        lin = dict(lineage or {})
+        lin.setdefault("snapshot", True)
+        img = BlockImage(
+            tokens=list(tokens) if tokens is not None else [],
+            n_tokens=block.n_tokens,
+            props=block.props & ~(VBProps.SHARED_RO | VBProps.COW),
+            page_size=self.pool.page_size, n_pages=n_pages, charge=charge,
+            k=np.asarray(jax.device_get(k))[:, :n_pages],
+            v=np.asarray(jax.device_get(v))[:, :n_pages],
+            aux=aux, lineage=lin, src_bid=block.bid,
+            src_pool=self.trace_pool)
+        img.checksum = img.compute_checksum()
+        self.stats["image_snapshots"] += 1
+        self._trace("snapshot_image", block, n_pages=n_pages,
+                    bytes=img.nbytes, n_tokens=block.n_tokens)
         return img
 
     def import_image(self, img: BlockImage, slot: int,
@@ -618,7 +752,30 @@ class VBIAllocator:
         on page size and layer kinds — total pages, slot count and row
         width may all differ (the image is padded to THIS pool's row).
         ``reserve_pages`` (≥ the image size) is the admission budget, like
-        ``swap_in``."""
+        ``swap_in``.
+
+        Import is **idempotent** by (pool, bid, lineage): re-delivering an
+        image whose block is still resident returns that block unchanged
+        (one ``import_dedup`` trace op, no double-charge) — so a handoff
+        sender may retransmit on a lost acknowledgment without risking a
+        duplicate adoption.  And it is **integrity-checked**: a sealed
+        image that fails its checksum raises :class:`ImageIntegrityError`
+        before any state is touched (DESIGN.md §12)."""
+        key = self._image_key(img)
+        if key is not None:
+            live = self._imports.get(key)
+            if live is not None and live.status == "resident":
+                self.stats["image_imports_deduped"] += 1
+                self._trace("import_dedup", live, img_bid=img.src_bid,
+                            img_pool=img.src_pool)
+                return live
+        if self.faults is not None:     # transit: loss or corruption
+            img = self.faults.deliver(img, tracer=self.tracer)
+        if img.checksum is not None and not img.verify():
+            raise ImageIntegrityError(
+                f"block image (src_pool={img.src_pool} bid={img.src_bid}) "
+                f"failed its integrity checksum — refusing to adopt",
+                fault_id=getattr(img, "_fault_id", None))
         assert slot not in self.blocks, "slot busy"
         assert img.page_size == self.pool.page_size, \
             f"page-size mismatch: image {img.page_size} vs pool " \
@@ -648,12 +805,19 @@ class VBIAllocator:
         blk.reserved_pages = need
         blk.vbid = self.mtl.enable_vb(0, blk.props)
         self.blocks[slot] = blk
+        if key is not None:
+            self._imports[key] = blk
+            self._import_keys[blk.bid] = key
         self.stats["image_imports"] += 1
         self.stats["image_bytes_in"] += img.nbytes
+        # snapshot-provenance images (crash recovery) are external to this
+        # trace: the checker must not demand an in-trace export for them
+        external = bool(isinstance(img.lineage, dict)
+                        and img.lineage.get("snapshot"))
         self._trace("import_image", blk, n_pages=img.n_pages,
                     charge=img.charge, reserve=need, bytes=img.nbytes,
                     n_tokens=img.n_tokens, img_bid=img.src_bid,
-                    img_pool=img.src_pool)
+                    img_pool=img.src_pool, img_external=external)
         return blk
 
 

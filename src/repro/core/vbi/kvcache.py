@@ -17,6 +17,7 @@ eviction.  Device side = pure functional JAX on a page pool:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from functools import partial
 from typing import List, Optional, Tuple
 
@@ -448,6 +449,21 @@ def pad_block_image(k: np.ndarray, v: np.ndarray, n_pages: int,
     kp[:, :n_pages] = k
     vp[:, :n_pages] = v
     return kp, vp
+
+
+def kv_payload_checksum(k: np.ndarray, v: np.ndarray,
+                        aux: "Optional[Tuple[np.ndarray, ...]]" = None) -> int:
+    """CRC-32 over a block image's device-state payload — the K/V page
+    bytes plus any RING/RECURRENT aux arrays — chained in a fixed order
+    so the digest is a pure function of the state a ``restore_block`` /
+    ``restore_aux`` would scatter back in.  The page-state owner computes
+    the page half of the integrity checksum; ``core/vbi/blocks.py`` folds
+    in the tokens and custody metadata (DESIGN.md §12)."""
+    crc = zlib.crc32(np.ascontiguousarray(k).tobytes())
+    crc = zlib.crc32(np.ascontiguousarray(v).tobytes(), crc)
+    for arr in (aux or ()):
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes(), crc)
+    return crc & 0xFFFFFFFF
 
 
 @jax.jit

@@ -157,6 +157,26 @@ def main(argv=None) -> None:
                     help="trace file format: 'jsonl' (one event per line, "
                          "the checker's input) or 'chrome' (trace_event "
                          "JSON for Perfetto / chrome://tracing)")
+    ap.add_argument("--faults", action="store_true",
+                    help="chaos mode (DESIGN.md §12): inject seeded faults "
+                         "at every VBI boundary — transient alloc "
+                         "exhaustion, swap I/O failure, block-image loss "
+                         "and corruption, poisoned decode ticks — and "
+                         "recover exactly (bounded retry, re-prefill, "
+                         "degradation ladder); outputs are bit-identical "
+                         "to the fault-free run")
+    ap.add_argument("--fault-rate", type=float, default=0.05,
+                    help="per-boundary fault firing probability for "
+                         "--faults (flat across fault classes)")
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="seed of the rate-independent fault streams: one "
+                         "seed sweeps intensities over identical traffic")
+    ap.add_argument("--fault-model", default=None,
+                    help="derive fault rates from the SIMDRAM reliability "
+                         "model instead of --fault-rate, e.g. "
+                         "'simdram:node=22' (core/reliability.py): the "
+                         "multi-row activation failure rate at that node "
+                         "becomes the per-boundary fault probability")
     ap.add_argument("--metrics", action="store_true",
                     help="print the metrics-registry snapshot (counters, "
                          "gauges with high-water marks, latency "
@@ -173,6 +193,9 @@ def main(argv=None) -> None:
                  "(drop --legacy)")
     if args.legacy and args.disagg:
         ap.error("--disagg needs the jitted engine path (drop --legacy)")
+    if args.legacy and (args.faults or args.fault_model):
+        ap.error("--faults needs the VBI allocator boundaries "
+                 "(drop --legacy)")
 
     cfg = serve_config(args.arch, args.smoke)
     if args.legacy and (cfg.family not in ("dense", "vlm")
@@ -229,6 +252,14 @@ def main(argv=None) -> None:
             cache = None
         telem = (Telemetry(trace=args.trace is not None)
                  if args.trace or args.metrics else None)
+        plan = None
+        if args.faults or args.fault_model:
+            from ..serve.faults import plan_from_args
+            plan = plan_from_args(args.fault_rate, args.fault_seed,
+                                  model=args.fault_model)
+            print(f"[serve] chaos mode: fault rates "
+                  f"{ {k: f'{v:g}' for k, v in plan.rates.items()} } "
+                  f"seed={args.fault_seed} (DESIGN.md §12)")
         if args.disagg:
             from ..serve.disagg import DisaggScheduler
             print(f"[serve] disagg topology: prefill "
@@ -239,12 +270,14 @@ def main(argv=None) -> None:
                                     prefill_chunk=args.prefill_chunk,
                                     decode_horizon=args.decode_horizon,
                                     overlap=args.overlap,
-                                    prefix_cache=cache, telemetry=telem)
+                                    prefix_cache=cache, telemetry=telem,
+                                    faults=plan)
         else:
             sched = Scheduler(engine, prefill_chunk=args.prefill_chunk,
                               prefix_cache=cache,
                               decode_horizon=args.decode_horizon,
-                              overlap=args.overlap, telemetry=telem)
+                              overlap=args.overlap, telemetry=telem,
+                              faults=plan)
         if args.traffic:
             finished = _run_traffic(cfg, sched, args)
         else:
@@ -269,6 +302,10 @@ def main(argv=None) -> None:
         if cache is not None:
             print(f"[serve] prefix cache: hit_rate={cache.hit_rate:.2f} "
                   f"stats {cache.stats}")
+        if plan is not None:
+            print(f"[serve] fault plan: {plan.stats}")
+            assert plan.stats["unresolved"] == 0, \
+                "chaos run left injected faults unresolved"
         if telem is not None:
             _emit_telemetry(telem, args)
     dt = time.time() - t0

@@ -68,7 +68,8 @@ class DisaggScheduler:
                  prefix_cache: Optional[PrefixCache] = None,
                  block_props: VBProps = DEFAULT_BLOCK_PROPS,
                  on_tokens=None, on_finish=None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 faults=None, retry=None):
         assert prefill_engine is not decode_engine, \
             "disaggregation needs two engines"
         assert prefill_engine.page_size == decode_engine.page_size, \
@@ -90,16 +91,23 @@ class DisaggScheduler:
         self._max_new: Dict[int, int] = {}
         p_tel = telemetry.scoped("prefill") if telemetry is not None else None
         d_tel = telemetry.scoped("decode") if telemetry is not None else None
+        # ONE FaultPlan interposes on BOTH allocators (serve/faults.py,
+        # DESIGN.md §12): every VBI boundary on either engine — and the
+        # image handoff between them — draws from the same seeded streams,
+        # so a chaos run over the two-engine topology is reproducible
+        self.faults = faults
         self.prefill = Scheduler(
             prefill_engine, prefill_chunk=prefill_chunk,
             prefix_cache=prefix_cache, block_props=block_props,
             decode_horizon=1, telemetry=p_tel, handoff=self._handoff,
-            on_tokens=self._fwd_tokens, on_finish=self._finish)
+            on_tokens=self._fwd_tokens, on_finish=self._finish,
+            faults=faults, retry=retry)
         self.decode = Scheduler(
             decode_engine, prefill_chunk=prefill_chunk,
             decode_horizon=decode_horizon, overlap=overlap,
             block_props=block_props, telemetry=d_tel,
-            on_tokens=self._fwd_tokens, on_finish=self._finish)
+            on_tokens=self._fwd_tokens, on_finish=self._finish,
+            faults=faults, retry=retry)
 
     # -- the duck-typed scheduler surface (serve/traffic.py) -----------------
     @property
@@ -112,6 +120,29 @@ class DisaggScheduler:
         merged.update(
             {("decode", s): st for s, st in self.decode.slots.items()})
         return merged
+
+    @property
+    def shed(self) -> List[Request]:
+        """Requests load-shed by either engine's degradation ladder."""
+        return list(self.prefill.shed) + list(self.decode.shed)
+
+    @property
+    def shed_policy(self):
+        return self.prefill.shed_policy
+
+    @shed_policy.setter
+    def shed_policy(self, fn) -> None:
+        self.prefill.shed_policy = fn
+        self.decode.shed_policy = fn
+
+    @property
+    def on_shed(self):
+        return self.prefill.on_shed
+
+    @on_shed.setter
+    def on_shed(self, fn) -> None:
+        self.prefill.on_shed = fn
+        self.decode.on_shed = fn
 
     def add_request(self, prompt: List[int], max_new: int,
                     rid: Optional[int] = None) -> int:

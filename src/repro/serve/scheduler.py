@@ -74,10 +74,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.vbi.address_space import VBProps
-from ..core.vbi.blocks import DEFAULT_BLOCK_PROPS, VirtualBlock
+from ..core.vbi.blocks import (DEFAULT_BLOCK_PROPS, ImageIntegrityError,
+                               VirtualBlock)
 from ..core.vbi.kvcache import tier_nbytes
 from .engine import PagedEngine
+from .faults import install_faults
 from .prefix_cache import PrefixCache, PrefixMatch, _Node
+from .recovery import RetryExhausted, RetryPolicy, retry_call
 from .telemetry import StatsView, Telemetry
 
 #: ``Scheduler.stats`` keys, pinned: the dict-compatible face every test
@@ -87,7 +90,14 @@ _STAT_KEYS = ("preemptions", "steps", "prefix_hits",
               "swap_ins", "prefill_tokens", "host_syncs",
               "prefill_host_reads", "prefill_reads_skipped",
               "horizon_truncations", "overlap_staged_ticks",
-              "sync_device_ready", "sync_device_wait", "image_imports")
+              "sync_device_ready", "sync_device_wait", "image_imports",
+              "fault_retries", "fault_fallbacks", "fault_sheds",
+              "horizon_shrinks", "decode_tick_retries")
+
+#: ticks the degradation ladder holds the horizon at 1 after an
+#: admission-path retry exhaustion, before restoring ``decode_horizon``;
+#: a second exhaustion inside the window escalates to load-shedding
+DEGRADE_TICKS = 8
 
 
 def check_request_fits(engine: PagedEngine, alloc, prompt_len: int,
@@ -163,7 +173,8 @@ class Scheduler:
                  decode_horizon: int = 1, overlap: bool = False,
                  on_tokens=None, on_finish=None,
                  telemetry: Optional[Telemetry] = None,
-                 handoff=None):
+                 handoff=None, faults=None,
+                 retry: Optional[RetryPolicy] = None):
         if prefix_cache is not None:
             assert prefix_cache.page_size == engine.page_size
             # RING frames are position-recycled and RECURRENT state is not
@@ -193,6 +204,19 @@ class Scheduler:
         self.finished: List[Request] = []
         self._next_rid = 0
         self._admit_seq = 0
+        # fault plane + recovery (serve/faults.py / serve/recovery.py,
+        # DESIGN.md §12): the plan interposes on the allocator's VBI
+        # boundaries; this scheduler owns retry/fallback policy, the
+        # degradation ladder (horizon→1 before shedding) and the
+        # decode-tick fault class.  faults=None costs one check per site.
+        self.faults = faults
+        self.retry = retry or RetryPolicy()
+        self._degrade_until = 0            # tick the horizon cap lifts at
+        self.shed_policy = None            # callable(queued) -> victim
+        self.on_shed = None                # streaming hook (traffic.py)
+        self.shed: List[Request] = []
+        if faults is not None:
+            install_faults(self.alloc, faults)
         # the in-flight horizon (overlap mode): the un-synced [K, S] device
         # token block plus the slot ids and per-slot step budgets it was
         # dispatched with, reconciled at the NEXT tick's sync point
@@ -289,8 +313,85 @@ class Scheduler:
         self._next_rid = max(self._next_rid, rid) + 1
         req = Request(rid, list(prompt), max_new)
         self.queue.append(req)
-        self._req_ev("arrive", req, prompt_len=len(prompt), max_new=max_new)
+        # the arrive event carries the prompt itself: the trace doubles as
+        # the crash-recovery journal (serve/recovery.py) — requests that
+        # arrived after the last snapshot are replayed from it
+        self._req_ev("arrive", req, prompt_len=len(prompt), max_new=max_new,
+                     prompt=list(prompt))
         return rid
+
+    # -- fault plane: retry, degradation ladder, shedding (DESIGN.md §12) ----
+    @property
+    def effective_horizon(self) -> int:
+        """``decode_horizon``, unless the degradation ladder is holding
+        the engine at K=1 after an admission-path retry exhaustion."""
+        if self.stats["steps"] < self._degrade_until:
+            return 1
+        return self.decode_horizon
+
+    def _call_vbi(self, fn):
+        """One allocator boundary op under the bounded-retry policy:
+        transient injected faults are retried (recorded backoff) and
+        resolved ``retry_ok``; exhaustion raises
+        :class:`~repro.serve.recovery.RetryExhausted` to the site's
+        fallback handler.  Without a fault plan this is exactly ``fn()``."""
+        if self.faults is None:
+            return fn()
+        out, fired = retry_call(fn, policy=self.retry)
+        if fired:
+            self.faults.resolve(fired, "retry_ok", tracer=self.tracer,
+                                attempts=len(fired),
+                                backoff=sum(f.backoff for f in fired))
+            self.stats["fault_retries"] += len(fired)
+        return out
+
+    def _resolve_fallback(self, faults, detail: str) -> None:
+        """Close out exhausted/terminal faults whose recovery is an exact
+        fallback (skip / discard / re-prefill)."""
+        faults = [f for f in (faults or []) if f is not None]
+        if self.faults is not None and faults:
+            self.faults.resolve(faults, "fallback", tracer=self.tracer,
+                                detail=detail)
+            self.stats["fault_fallbacks"] += len(faults)
+
+    def _fault_fallback_admit(self, faults, req: Request) -> None:
+        """The degradation ladder for admission-path retry exhaustion
+        under sustained pressure: first shrink the decode horizon to 1
+        for ``DEGRADE_TICKS`` (frees span headroom, keeps every request);
+        a second exhaustion inside the window load-sheds via the
+        SLO-aware policy (serve/traffic.py).  ``req`` stays at the queue
+        head in the shrink case and retries next tick with fresh draws."""
+        if self.stats["steps"] >= self._degrade_until:
+            self._degrade_until = self.stats["steps"] + DEGRADE_TICKS
+            self.stats["horizon_shrinks"] += 1
+            self._resolve_fallback(faults, detail="horizon_shrink")
+        else:
+            self._shed_one(faults)
+
+    def _shed_one(self, faults) -> None:
+        """Load-shed one queued request — the ladder's last rung.  The
+        victim comes from ``shed_policy`` (the traffic driver installs
+        SLO-aware ordering: prefer requests whose TTFT SLO is already
+        blown, so goodput loses least) and its block/image custody is
+        released cleanly; the shed is accounted in the trace (``recover``
+        outcome=shed + a ``shed`` request event), never a silent drop."""
+        victim = (self.shed_policy(list(self.queue)) if self.shed_policy
+                  else self.queue[0])
+        self.queue.remove(victim)
+        if victim.block is not None:
+            self.alloc.free(victim.block)
+            victim.block = None
+        if victim.image is not None:
+            self.alloc.drop_image(victim.image)
+            victim.image = None
+        self.shed.append(victim)
+        self.stats["fault_sheds"] += 1
+        if self.faults is not None and faults:
+            self.faults.resolve(faults, "shed", tracer=self.tracer,
+                                rid=victim.rid)
+        self._req_ev("shed", victim, n_out=len(victim.out))
+        if self.on_shed is not None:
+            self.on_shed(victim)
 
     # -- page budgeting (delegated to the allocator's host mirror) -----------
     def _budget_for(self, req: Request, n_shared: int = 0,
@@ -317,7 +418,7 @@ class Scheduler:
         fit, fall back to the minimum viable budget — the first horizon
         gets truncated, which beats leaving the slot idle.  Shared by
         fresh and swap-resume admission so the two can't drift."""
-        budget = self._budget_for(req, n_shared, self.decode_horizon)
+        budget = self._budget_for(req, n_shared, self.effective_horizon)
         if budget > self.alloc.free_pages:
             self._evict_cache(budget - self.alloc.free_pages)
         if budget > self.alloc.free_pages:
@@ -408,7 +509,20 @@ class Scheduler:
             st = _SlotState(req, blk, prefill_len=len(req.tokens),
                             admit_seq=self._admit_seq)
             self._admit_seq += 1
-            self.alloc.reserve_pages(blk, budget)
+            try:
+                self._call_vbi(
+                    lambda: self.alloc.reserve_pages(blk, budget))
+            except RetryExhausted as e:
+                # nothing committed yet: undo the admission cleanly and
+                # climb the degradation ladder.  The request keeps its
+                # place at the queue head and re-tries with fresh draws.
+                if match is not None:
+                    self.prefix_cache.unpin(match.all_nodes())
+                self.alloc.free(blk)
+                free_slots.insert(0, slot)
+                self.queue.appendleft(req)
+                self._fault_fallback_admit(e.faults, req)
+                break
             if match is not None and match.n_tokens:
                 ps = self.engine.page_size
                 if match.pages:
@@ -437,7 +551,20 @@ class Scheduler:
         self.queue.popleft()
         slot = free_slots.pop(0)
         blk, req.block = req.block, None
-        self.alloc.swap_in(blk, slot, reserve_pages=budget)
+        try:
+            self._call_vbi(
+                lambda: self.alloc.swap_in(blk, slot, reserve_pages=budget))
+        except RetryExhausted as e:
+            # the swap tier read is persistently failing: give up the host
+            # image and fall back to exact re-prefill of the request's
+            # committed tokens (the same recompute the discard-preemption
+            # path already proves bit-exact).  swap_in raised before any
+            # mutation, so the swapped block just frees.
+            self.alloc.free(blk)
+            free_slots.insert(0, slot)
+            self.queue.appendleft(req)
+            self._resolve_fallback(e.faults, detail="reprefill")
+            return True                 # fresh-admission path, same tick
         st = _SlotState(req, blk, prefill_len=len(req.tokens),
                         fed=blk.n_tokens, admit_seq=self._admit_seq)
         self._admit_seq += 1
@@ -456,10 +583,34 @@ class Scheduler:
         budget = self._degraded_budget(req)
         if budget > self.alloc.free_pages:
             return False
+        slot = free_slots[0]
+        img = req.image
+        try:
+            blk = self._call_vbi(
+                lambda: self.alloc.import_image(img, slot,
+                                                reserve_pages=budget))
+        except RetryExhausted as e:
+            # the image never arrived (persistent transfer loss): drop it
+            # and re-prefill the request's committed tokens — exact, the
+            # KV is a pure function of them under greedy decode
+            self.alloc.drop_image(img)
+            req.image = None
+            self._resolve_fallback(e.faults, detail="reprefill")
+            return True                 # fresh-admission path, same tick
+        except ImageIntegrityError as e:
+            # a corrupt image is TERMINAL, not transient: retrying the
+            # same bits cannot help.  Reject it (import_image raised
+            # before any allocation) and fall back to exact re-prefill.
+            self.alloc.drop_image(img)
+            req.image = None
+            faults = list(getattr(e, "pending_faults", []))
+            if e.fault_id is not None:
+                faults.append(e.fault_id)
+            self._resolve_fallback(faults, detail="reprefill")
+            return True
         self.queue.popleft()
-        slot = free_slots.pop(0)
-        img, req.image = req.image, None
-        blk = self.alloc.import_image(img, slot, reserve_pages=budget)
+        free_slots.pop(0)
+        req.image = None
         # fed = the committed tokens the image covered; anything past them
         # (the handoff's first decode token) feeds through the prefill path
         st = _SlotState(req, blk, prefill_len=len(req.tokens),
@@ -502,7 +653,17 @@ class Scheduler:
         # block admitted mostly via cache sharing could otherwise wedge in
         # the queue forever; the discard path below keeps the discount
         fits = self._budget_for(st.req) <= self.engine.n_pages - 1
-        if fits and self.alloc.swap_out(st.block):
+        if fits:
+            try:
+                fits = self._call_vbi(lambda: self.alloc.swap_out(st.block))
+            except RetryExhausted as e:
+                # the swap tier write is persistently failing: demote the
+                # preemption to the discard path below (cache the fed
+                # prefix, drop the pages) — re-admission re-prefills,
+                # which is exact.  swap_out raised before any mutation.
+                fits = False
+                self._resolve_fallback(e.faults, detail="discard")
+        if fits:
             self._unpin(st)
             st.req.block = st.block
             self.stats["swap_outs"] += 1
@@ -547,7 +708,7 @@ class Scheduler:
                             - st.block.reserved_pages)
             return need - self.alloc.free_pages
 
-        k = self.decode_horizon
+        k = self.effective_horizon
         # near the tail of generation no slot may want the full horizon:
         # shrink K along the halving ladder (bounded set of compiled scan
         # lengths) so fully-masked scan steps don't burn model compute
@@ -574,8 +735,18 @@ class Scheduler:
         for s in dec_slots:
             if s in self.slots:
                 st = self.slots[s]
-                wants[s] = want(s, k)
-                self.alloc.reserve_span(st.block, st.fed, wants[s])
+                w = want(s, k)
+                try:
+                    self._call_vbi(
+                        lambda b=st.block, f=st.fed, n=w:
+                        self.alloc.reserve_span(b, f, n))
+                except RetryExhausted as e:
+                    # drop this slot from the horizon for one tick (it is
+                    # excluded from the dispatch mask entirely): nothing
+                    # mutated, the slot resumes next tick — exact stall
+                    self._resolve_fallback(e.faults, detail="skip_horizon")
+                    continue
+                wants[s] = w
         return k, wants
 
     # -- one scheduler tick ---------------------------------------------------
@@ -598,7 +769,16 @@ class Scheduler:
             for s, st in pre.items():
                 seq = st.req.tokens
                 n = min(C, st.prefill_len - st.fed)
-                self.alloc.reserve(st.block, st.fed + n)
+                try:
+                    self._call_vbi(
+                        lambda b=st.block, t=st.fed + n:
+                        self.alloc.reserve(b, t))
+                except RetryExhausted as e:
+                    # skip this slot's chunk for one tick (counts stays 0:
+                    # the dispatch writes nothing for the lane) — a pure
+                    # stall, nothing mutated, exact by construction
+                    self._resolve_fallback(e.faults, detail="stall_chunk")
+                    continue
                 toks[s, :n] = seq[st.fed:st.fed + n]
                 counts[s] = n
             ext["slots"] = len(pre)
@@ -663,10 +843,26 @@ class Scheduler:
         without the device free stack ever being oversubscribed."""
         dec_ids = [s for s, st in self.slots.items()
                    if not st.prefilling and s not in pre_ids]
+        if dec_ids and self.faults is not None:
+            # decode-tick fault class: a poisoned/timed-out horizon
+            # dispatch, re-dispatched within the tick (bounded by the
+            # retry budget).  Nothing was committed — the repeat is
+            # trivially bit-exact — so each fires and resolves retry_ok
+            # on the spot; only latency is lost (accounted, not slept).
+            fired = []
+            while (len(fired) < self.retry.max_attempts
+                   and self.faults.fires("decode_tick")):
+                fired.append(self.faults.fire(
+                    "decode_tick", tracer=self.tracer,
+                    tick=self.stats["steps"]))
+            if fired:
+                self.faults.resolve(fired, "retry_ok", tracer=self.tracer,
+                                    attempts=len(fired))
+                self.stats["decode_tick_retries"] += len(fired)
         wants = {}
         if dec_ids:
             k, wants = self._plan_horizon(dec_ids)
-            dec_ids = [s for s in dec_ids if s in self.slots]
+            dec_ids = [s for s in dec_ids if s in self.slots and s in wants]
         if not dec_ids:
             return
         with self._span("tick.decode_dispatch", k=k, slots=len(dec_ids)):

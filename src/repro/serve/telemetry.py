@@ -514,8 +514,19 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
     same charge) charges it into the destination, and a drained run must
     leave no image in flight.
 
-    Returns a summary dict (event/block/op counts, peak occupancy).
-    Raises :class:`TraceCheckError` on the first violation."""
+    The fault plane (DESIGN.md §12) extends the contract: every ``fault``
+    event (unique ``fault_id``) must be matched by exactly one ``recover``
+    event with a valid outcome (``retry_ok`` / ``fallback`` / ``shed``) —
+    a trace with an injected fault left unresolved, or a resolution for a
+    fault that never fired, cannot replay clean, so silent drops are
+    structurally impossible.  Imports marked ``img_external`` (crash-
+    recovery snapshots, whose export happened in a previous process) skip
+    the cross-pool inflight match; ``drop_image`` retires an in-flight
+    image without importing it (an accounted shed/fallback).
+
+    Returns a summary dict (event/block/op counts, peak occupancy,
+    fault/recovery counts).  Raises :class:`TraceCheckError` on the first
+    violation."""
     metas: Dict[object, dict] = {}          # pool label -> first geometry meta
     for e in events:
         if e.get("type") == "meta" and "n_pages" in e:
@@ -535,9 +546,32 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
             "peak": 0,
         }
     inflight: Dict[tuple, int] = {}         # (src pool, src bid) -> charge
+    faults_open: Dict[int, str] = {}        # fault_id -> kind, unresolved
+    fault_ids_seen: set = set()
+    n_faults = 0
+    n_recovered = {"retry_ok": 0, "fallback": 0, "shed": 0}
     n_ops = 0
     for i, ev in enumerate(events):
         label = ev.get("pool")
+        if ev.get("type") == "fault":
+            fid = int(ev["fault_id"])
+            if fid in fault_ids_seen:
+                _fail(i, ev, f"fault id {fid} fired twice")
+            fault_ids_seen.add(fid)
+            faults_open[fid] = ev.get("kind", "?")
+            n_faults += 1
+            continue
+        if ev.get("type") == "recover":
+            fid = int(ev["fault_id"])
+            outcome = ev.get("outcome")
+            if outcome not in n_recovered:
+                _fail(i, ev, f"unknown recovery outcome {outcome!r}")
+            if fid not in faults_open:
+                _fail(i, ev, f"recovery for fault id {fid} that never "
+                      f"fired (or was already resolved)")
+            del faults_open[fid]
+            n_recovered[outcome] += 1
+            continue
         if ev.get("type") == "gauge":
             st = pools.get(label)
             if st is None:
@@ -646,20 +680,43 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
         elif op == "import_image":
             if blk is not None and blk["status"] != "freed":
                 _fail(i, ev, f"bid {bid} allocated twice")
-            key = (ev.get("img_pool"), ev.get("img_bid"))
-            if key not in inflight:
-                _fail(i, ev, f"import of never-exported image "
-                      f"(pool {key[0]!r}, bid {key[1]})")
-            if int(ev["charge"]) != inflight[key]:
-                _fail(i, ev, f"import claims charge {ev['charge']} but "
-                      f"export paid {inflight[key]}")
-            del inflight[key]
+            if ev.get("img_external"):
+                # a crash-recovery snapshot image (DESIGN.md §12): its
+                # "export" was a non-destructive snapshot in a previous
+                # process, so there is no in-trace export to match
+                pass
+            else:
+                key = (ev.get("img_pool"), ev.get("img_bid"))
+                if key not in inflight:
+                    _fail(i, ev, f"import of never-exported image "
+                          f"(pool {key[0]!r}, bid {key[1]})")
+                if int(ev["charge"]) != inflight[key]:
+                    _fail(i, ev, f"import claims charge {ev['charge']} but "
+                          f"export paid {inflight[key]}")
+                del inflight[key]
             need = int(ev["reserve"])
             if need > st["free"]:
                 _fail(i, ev, f"import reserves {need} > {st['free']} free")
             st["free"] -= need
             blocks[bid] = {"status": "resident", "reserved": need,
                            "charge": 0}
+        elif op == "import_dedup":
+            # retransmission of an already-imported image resolved against
+            # the idempotency ledger: the live block must really be
+            # resident, and NO accounting moves (no double charge)
+            if blk is None or blk["status"] != "resident":
+                _fail(i, ev, f"import_dedup against non-resident bid {bid}")
+        elif op == "snapshot_image":
+            # non-destructive capture for crash recovery: custody does not
+            # move, the block stays resident, nothing charges
+            if blk is None or blk["status"] != "resident":
+                _fail(i, ev, f"snapshot_image of non-resident bid {bid}")
+        elif op == "drop_image":
+            # an in-flight image retired without import (lost in transit /
+            # rejected corrupt / shed) — its custody charge is abandoned
+            # with it; dropping an external snapshot image has no in-trace
+            # export to retire
+            inflight.pop((ev.get("img_pool"), ev.get("img_bid")), None)
         elif op == "retain":
             n = int(ev["n_pages"])
             fb = ev.get("from_bid")
@@ -721,11 +778,22 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
         raise TraceCheckError(
             f"{len(inflight)} exported block image(s) never imported "
             f"by a drained run: {sorted(inflight)}")
+    if faults_open:
+        by_kind: Dict[str, int] = {}
+        for kind in faults_open.values():
+            by_kind[kind] = by_kind.get(kind, 0) + 1
+        raise TraceCheckError(
+            f"{len(faults_open)} injected fault(s) never resolved "
+            f"(silent drop): {by_kind} — every fault event needs a "
+            f"matching recover event (retry_ok / fallback / shed)")
     return {"n_events": len(events), "n_block_ops": n_ops,
             "n_blocks": n_blocks, "live_blocks": n_live,
             "ledger_pages": ledger_total, "swap_pages_held": tier_total,
             "peak_pages_used": peak_total, "n_pools": len(pools),
-            "images_in_flight": len(inflight)}
+            "images_in_flight": len(inflight), "n_faults": n_faults,
+            "n_retry_ok": n_recovered["retry_ok"],
+            "n_fallback": n_recovered["fallback"],
+            "n_shed": n_recovered["shed"], "faults_unresolved": 0}
 
 
 def main(argv=None) -> int:

@@ -167,6 +167,7 @@ class _ReqTiming:
     t_last: Optional[float] = None
     n_tokens: int = 0
     t_finish: Optional[float] = None
+    t_shed: Optional[float] = None      # load-shed by the fault ladder
 
     @property
     def ttft(self) -> float:
@@ -219,6 +220,12 @@ class LatencyAccountant:
         if r.t_first is not None:
             self.tpot_hist.observe(r.tpot)
 
+    def on_shed(self, rid: int, t: float) -> None:
+        """The request was load-shed by the degradation ladder
+        (DESIGN.md §12): it never finishes, and the summary reports it —
+        a shed is an accounted loss, never a silent one."""
+        self.reqs[rid].t_shed = t
+
     def summary(self, slo_ttft: float = float("inf"),
                 slo_tpot: float = float("inf")) -> Dict[str, float]:
         done = [r for r in self.reqs.values()
@@ -248,7 +255,34 @@ class LatencyAccountant:
             "slo_ttft": slo_ttft, "slo_tpot": slo_tpot,
             "slo_attainment": len(good) / len(done),
             "goodput_req_s": len(good) / dur,
+            "n_shed": sum(1 for r in self.reqs.values()
+                          if r.t_shed is not None),
         }
+
+
+def make_slo_shed_policy(acct: LatencyAccountant, clock,
+                         slo_ttft: float) -> Callable:
+    """SLO-aware shed ordering for the scheduler's degradation ladder
+    (DESIGN.md §12): when the ladder must drop a queued request, drop the
+    one goodput loses least by — prefer a request that has produced no
+    token yet AND whose TTFT SLO is already most blown (it was going to
+    miss anyway); among untarnished candidates, the longest-waiting one
+    (most at risk).  Requests the accountant never saw (can't happen
+    under the driver, but the policy is defensive) rank last."""
+    def policy(queued):
+        def keyf(req):
+            r = acct.reqs.get(req.rid)
+            if r is None:
+                return (-1, 0.0)
+            waited = clock.now() - r.t_arrival
+            no_token = r.t_first is None
+            # (tier, waited): tier 2 = no token AND SLO already blown,
+            # tier 1 = no token yet, tier 0 = already streaming
+            tier = 2 if (no_token and waited > slo_ttft) else \
+                (1 if no_token else 0)
+            return (tier, waited)
+        return max(queued, key=keyf)
+    return policy
 
 
 # --------------------------------------------------------------------------
@@ -308,7 +342,8 @@ class TrafficDriver:
     whole replay) is as deterministic as the unified engine's."""
 
     def __init__(self, sched, trace: Sequence[TimedRequest],
-                 clock=None, accountant: Optional[LatencyAccountant] = None):
+                 clock=None, accountant: Optional[LatencyAccountant] = None,
+                 slo_ttft: Optional[float] = None):
         self.sched = sched
         self.trace = sorted(trace, key=lambda r: (r.t_arrival, r.rid))
         self.clock = clock if clock is not None else WallClock()
@@ -316,12 +351,23 @@ class TrafficDriver:
             else LatencyAccountant()
         sched.on_tokens = self._on_tokens
         sched.on_finish = self._on_finish
+        # fault-plane wiring (DESIGN.md §12): sheds are timestamped into
+        # the accountant, and — given a TTFT SLO — the scheduler's ladder
+        # picks its shed victims SLO-aware so goodput loses least
+        if hasattr(sched, "on_shed"):
+            sched.on_shed = self._on_shed
+            if slo_ttft is not None:
+                sched.shed_policy = make_slo_shed_policy(
+                    self.acct, self.clock, slo_ttft)
 
     def _on_tokens(self, req, n_new: int) -> None:
         self.acct.on_tokens(req.rid, self.clock.now(), n_new)
 
     def _on_finish(self, req) -> None:
         self.acct.on_finish(req.rid, self.clock.now())
+
+    def _on_shed(self, req) -> None:
+        self.acct.on_shed(req.rid, self.clock.now())
 
     def run(self, max_steps: int = 1_000_000):
         """Drain the trace; returns the scheduler's finished requests."""

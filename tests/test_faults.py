@@ -1,0 +1,421 @@
+"""The fault plane + exact recovery (DESIGN.md §12).
+
+  * the seeded fault streams are rate-independent (a higher rate fires a
+    superset of a lower rate's draws over the same boundary crossings)
+    and ``force()`` consumes no draw index;
+  * ``retry_call`` is bounded, records backoff, carries every fired fault
+    through :class:`RetryExhausted` / ``pending_faults``, and the plan's
+    accounting refuses double-resolution;
+  * image-transit faults at the pool level: a lost image is cleared by
+    retransmission (import is idempotent — no double charge), a corrupt
+    image fails its checksum with NOTHING charged and the drop is
+    accounted;
+  * chaos runs — unified and disaggregated — are bit-identical to the
+    fault-free reference at every injected-fault intensity, drain their
+    pools, and replay clean through the extended offline checker (no
+    unresolved faults);
+  * the degradation ladder: admission-path retry exhaustion shrinks the
+    decode horizon to 1 before a second exhaustion load-sheds ONE
+    request through the shed policy — accounted, never silent;
+  * crash recovery: periodic BlockImage snapshots + the telemetry
+    journal rebuild a fresh engine whose remaining outputs are
+    bit-identical to the uninterrupted run — including when a snapshot
+    leg is corrupted on disk (checksum rejects it, that leg re-prefills).
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.vbi.blocks import (ImageIntegrityError, PagePool,
+                                   VBIAllocator)
+from repro.core.vbi.kvcache import reserve_positions
+from repro.launch.serve import serve_config
+from repro.models.model import init_params
+from repro.serve.disagg import DisaggScheduler
+from repro.serve.engine import PagedEngine
+from repro.serve.faults import (FAULT_KINDS, FaultPlan, TransientFault,
+                                install_faults, simdram_rates)
+from repro.serve.recovery import (RetryExhausted, RetryPolicy,
+                                  ServeSnapshotter, recover_scheduler,
+                                  retry_call)
+from repro.serve.scheduler import Scheduler
+from repro.serve.telemetry import Telemetry, TraceRecorder, check_trace
+from repro.serve.traffic import TrafficDriver, VirtualClock, make_trace
+
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# the seeded streams + retry primitive (no engine)
+# --------------------------------------------------------------------------
+def test_fault_streams_rate_independent_and_monotone():
+    lo, hi = FaultPlan(0.05, seed=3), FaultPlan(0.2, seed=3)
+    fire_lo = [lo.fires("alloc") for _ in range(500)]
+    fire_hi = [hi.fires("alloc") for _ in range(500)]
+    assert 0 < sum(fire_lo) < sum(fire_hi)
+    # rate only moves the threshold: every low-rate firing also fires high
+    assert all(h for l, h in zip(fire_lo, fire_hi) if l)
+    # draw n of stream (seed, kind) is a pure function of the tuple:
+    # other streams' consumption cannot shift it
+    a = FaultPlan(0.1, seed=3)
+    seq = [a.fires("swap_in") for _ in range(200)]
+    b = FaultPlan(0.1, seed=3)
+    for _ in range(57):
+        b.fires("alloc")
+    assert [b.fires("swap_in") for _ in range(200)] == seq
+    # force() fires unconditionally and consumes NO draw index
+    c = FaultPlan(0.1, seed=3)
+    c.force("swap_in")
+    assert c.fires("swap_in") is True
+    assert [c.fires("swap_in") for _ in range(200)] == seq
+    with pytest.raises(AssertionError, match="unknown fault class"):
+        FaultPlan({"bogus": 0.1})
+    # the simdram rate source covers every class with the model's rate
+    rates = simdram_rates("simdram:node=22", scale=2.0)
+    assert set(rates) == set(FAULT_KINDS)
+    assert all(0.0 < r <= 1.0 for r in rates.values())
+
+
+def test_retry_call_bounded_backoff_and_accounting():
+    plan = FaultPlan({}, seed=0)
+    pol = RetryPolicy(max_attempts=3, base_backoff=0.5)
+    plan.force("alloc", 2)
+    calls = []
+
+    def op():
+        calls.append(1)
+        plan.check("alloc")
+        return "ok"
+
+    out, fired = retry_call(op, policy=pol)
+    assert out == "ok" and len(fired) == 2 and len(calls) == 3
+    assert [f.backoff for f in fired] == [0.5, 1.0]    # exponential, recorded
+    plan.resolve(fired, "retry_ok")
+    # exhaustion: max_attempts+1 tries, every fired fault carried along
+    plan.force("alloc", pol.max_attempts + 1)
+    with pytest.raises(RetryExhausted) as ei:
+        retry_call(op, policy=pol)
+    assert len(ei.value.faults) == pol.max_attempts + 1
+    plan.resolve(ei.value.faults, "fallback")
+    # a non-transient error propagates at once, pending faults attached
+    plan.force("alloc", 1)
+
+    def op_bad():
+        plan.check("alloc")
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError) as ev:
+        retry_call(op_bad, policy=pol)
+    assert len(ev.value.pending_faults) == 1
+    plan.resolve(ev.value.pending_faults, "fallback")
+    assert plan.stats["unresolved"] == 0
+    # double-resolution is a bug in the recovery path, not a no-op
+    with pytest.raises(AssertionError, match="resolved twice"):
+        plan.resolve(ev.value.pending_faults, "fallback")
+
+
+# --------------------------------------------------------------------------
+# image transit: loss, corruption, idempotent retransmission (pool level)
+# --------------------------------------------------------------------------
+def _mk_pool(n_pages=17, page_size=2, max_seqs=3, rowP=8):
+    pool = PagePool(n_layers=1, n_pages=n_pages, page_size=page_size,
+                    n_kv=1, head_dim=2, max_seqs=max_seqs,
+                    max_pages_per_seq=rowP)
+    return pool, VBIAllocator(pool)
+
+
+def _feed(pool, al, blk, n=1):
+    for _ in range(n):
+        al.reserve(blk, blk.n_tokens + 1)
+        mask = np.zeros((pool.max_seqs,), bool)
+        mask[blk.slot] = True
+        pool.state, _ = reserve_positions(pool.state, jnp.asarray(mask),
+                                          has_full=pool.has_full)
+        al.commit(blk, blk.n_tokens + 1)
+
+
+def test_image_checksum_catches_both_damage_modes():
+    pool, al = _mk_pool()
+    blk = al.alloc(0)
+    _feed(pool, al, blk, 5)
+    img = al.export_image(blk, tokens=list(range(5)))
+    assert img.verify()
+    bad = dataclasses.replace(img)               # one payload bit flipped
+    k = np.array(bad.k, copy=True)
+    k.view(np.uint8).reshape(-1)[3] ^= 0x01
+    bad.k = k
+    assert not bad.verify()
+    bad2 = dataclasses.replace(img)              # custody metadata falsified
+    bad2.charge = img.charge + 1
+    assert not bad2.verify()
+
+
+def test_image_transit_faults_lost_corrupt_dedup():
+    rec = TraceRecorder(clock=lambda: 0.0)
+    pool, al = _mk_pool()
+    al.attach_tracer(rec)
+    plan = FaultPlan({}, seed=0)
+    install_faults(al, plan)
+    blk = al.alloc(0)
+    _feed(pool, al, blk, 5)
+    img = al.export_image(blk, tokens=list(range(5)))
+    free0 = al.free_pages
+    # a lost image: the retry IS the retransmission
+    plan.force("image_loss")
+    blk2, fired = retry_call(lambda: al.import_image(img, 1))
+    plan.resolve(fired, "retry_ok", tracer=rec)
+    assert len(fired) == 1 and blk2.n_tokens == 5
+    # re-delivery while the block is resident: same block, no new charge,
+    # no transit draw (dedup happens BEFORE fault delivery)
+    assert al.import_image(img, 0) is blk2
+    assert al.free_pages == free0 - img.n_pages
+    assert al.stats["image_imports_deduped"] == 1
+    # re-export closes the retransmission window; corruption on the next
+    # delivery is caught by the checksum with nothing charged
+    img2 = al.export_image(blk2, tokens=img.tokens)
+    free1 = al.free_pages
+    plan.force("image_corrupt")
+    with pytest.raises(ImageIntegrityError) as ei:
+        al.import_image(img2, 1)
+    assert ei.value.fault_id is not None
+    assert al.free_pages == free1 and 1 not in al.blocks
+    al.drop_image(img2)                          # accounted, never silent
+    plan.resolve([ei.value.fault_id], "fallback", tracer=rec,
+                 detail="dropped")
+    assert plan.stats["unresolved"] == 0
+    assert al.stats["image_drops"] == 1
+    al.attach_tracer(None)
+    summary = check_trace(rec.events)
+    assert summary["faults_unresolved"] == 0
+    assert summary["images_in_flight"] == 0 and summary["live_blocks"] == 0
+
+
+# --------------------------------------------------------------------------
+# chaos runs: bit-exact under injected faults, trace replays clean
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stack():
+    cfg = serve_config("qwen3-0.6b")
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _closed_ref(cfg, params, trace):
+    eng = PagedEngine(cfg, params, n_pages=33, page_size=8, max_seqs=4,
+                      max_pages_per_seq=8)
+    sched = Scheduler(eng, prefill_chunk=8, decode_horizon=8)
+    for tr in trace:
+        sched.add_request(tr.prompt, tr.max_new, rid=tr.rid)
+    return {r.rid: r.out for r in sched.run()}
+
+
+def test_unified_chaos_bit_exact_across_rates(stack):
+    cfg, params = stack
+    trace = make_trace(cfg.vocab, n_requests=8, rate=2.0, seed=3,
+                       max_prompt=12, max_new_cap=8)
+    ref = _closed_ref(cfg, params, trace)
+    fired_counts = []
+    for rate in (0.05, 0.1):
+        plan = FaultPlan(rate, seed=7)
+        telem = Telemetry(trace=True)
+        eng = PagedEngine(cfg, params, n_pages=33, page_size=8, max_seqs=4,
+                          max_pages_per_seq=8)
+        sched = Scheduler(eng, prefill_chunk=8, decode_horizon=8,
+                          telemetry=telem, faults=plan)
+        drv = TrafficDriver(sched, trace, clock=VirtualClock())
+        out = {r.rid: r.out for r in drv.run()}
+        assert out == ref, f"fault rate {rate} changed output bits"
+        assert eng.pages_in_use == 0
+        assert plan.stats["unresolved"] == 0
+        fired_counts.append(sum(plan.fired.values()))
+        install_faults(eng.alloc, None)
+        eng.alloc.attach_tracer(None)
+        summary = check_trace(telem.tracer.events)
+        assert summary["faults_unresolved"] == 0
+        assert summary["n_faults"] == fired_counts[-1]
+        assert summary["live_blocks"] == 0
+    assert fired_counts[-1] > 0                  # the chaos was real
+
+
+def test_disagg_chaos_bit_exact_with_swap_pressure(stack):
+    """Two engines, one plan, decode pool tight enough to force swap-tier
+    preemption: alloc/swap/image faults all draw from the same seeded
+    streams, and the two-pool trace still replays clean."""
+    cfg, params = stack
+    trace = make_trace(cfg.vocab, n_requests=8, rate=2.0, seed=9,
+                       max_prompt=8, max_new_cap=12)
+    eng = PagedEngine(cfg, params, n_pages=33, page_size=4, max_seqs=4,
+                      max_pages_per_seq=8)
+    sched = Scheduler(eng, prefill_chunk=8, decode_horizon=8)
+    for tr in trace:
+        sched.add_request(tr.prompt, tr.max_new, rid=tr.rid)
+    ref = {r.rid: r.out for r in sched.run()}
+
+    plan = FaultPlan(0.1, seed=7)
+    telem = Telemetry(trace=True)
+    p_eng = PagedEngine(cfg, params, n_pages=13, page_size=4, max_seqs=4,
+                        max_pages_per_seq=3)
+    d_eng = PagedEngine(cfg, params, n_pages=8, page_size=4, max_seqs=4,
+                        max_pages_per_seq=5, host_swap_pages=16)
+    dsch = DisaggScheduler(p_eng, d_eng, prefill_chunk=8, decode_horizon=8,
+                           telemetry=telem, faults=plan)
+    drv = TrafficDriver(dsch, trace, clock=VirtualClock())
+    out = {r.rid: r.out for r in drv.run()}
+    assert out == ref
+    assert sum(plan.fired.values()) > 0
+    assert plan.stats["unresolved"] == 0
+    assert p_eng.pages_in_use == 0 and d_eng.pages_in_use == 0
+    assert d_eng.alloc.swap.used_pages == 0
+    for e in (p_eng, d_eng):
+        install_faults(e.alloc, None)
+        e.alloc.attach_tracer(None)
+    summary = check_trace(telem.tracer.events)
+    assert summary["n_pools"] == 2
+    assert summary["faults_unresolved"] == 0
+    assert summary["images_in_flight"] == 0 and summary["live_blocks"] == 0
+
+
+def test_decode_tick_poison_retries_bit_exact(stack):
+    cfg, params = stack
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, 6).tolist()
+
+    def run(plan):
+        eng = PagedEngine(cfg, params, n_pages=33, page_size=8, max_seqs=2,
+                          max_pages_per_seq=8)
+        sched = Scheduler(eng, prefill_chunk=8, decode_horizon=4,
+                          faults=plan)
+        sched.add_request(prompt, 6, rid=0)
+        return {r.rid: r.out for r in sched.run()}, sched
+
+    ref, _ = run(None)
+    plan = FaultPlan({}, seed=0)
+    plan.force("decode_tick", 3)
+    out, sched = run(plan)
+    assert out == ref                            # nothing was committed
+    assert sched.stats["decode_tick_retries"] == 3
+    assert plan.resolved["retry_ok"] == 3
+    assert plan.stats["unresolved"] == 0
+
+
+# --------------------------------------------------------------------------
+# the degradation ladder: horizon shrink before load-shed, both accounted
+# --------------------------------------------------------------------------
+def test_degradation_ladder_shrinks_horizon_then_sheds(stack):
+    cfg, params = stack
+    rng = np.random.default_rng(6)
+    telem = Telemetry(trace=True)
+    plan = FaultPlan({}, seed=0)
+    eng = PagedEngine(cfg, params, n_pages=33, page_size=8, max_seqs=4,
+                      max_pages_per_seq=8)
+    sched = Scheduler(eng, prefill_chunk=8, decode_horizon=8,
+                      telemetry=telem, faults=plan)
+    shed_seen = []
+    sched.on_shed = shed_seen.append
+    sched.shed_policy = lambda queued: queued[-1]    # victim: youngest
+    prompts = [rng.integers(0, cfg.vocab, 6).tolist() for _ in range(2)]
+    for i, p in enumerate(prompts):
+        sched.add_request(p, 4, rid=i)
+    exhaust = sched.retry.max_attempts + 1
+    # first admission-path exhaustion: rung 1 — horizon shrinks to 1
+    plan.force("alloc", exhaust)
+    sched.step()
+    assert sched.stats["horizon_shrinks"] == 1
+    assert sched.effective_horizon == 1 and sched.decode_horizon == 8
+    assert len(sched.shed) == 0 and len(sched.queue) == 2
+    # second exhaustion inside the window: rung 2 — shed ONE request,
+    # chosen by the installed policy
+    plan.force("alloc", exhaust)
+    sched.step()
+    assert sched.stats["fault_sheds"] == 1
+    assert [r.rid for r in sched.shed] == [1] == [r.rid for r in shed_seen]
+    assert plan.resolved["shed"] == exhaust
+    # the survivor still finishes with the reference bits, pools drain
+    out = {r.rid: r.out for r in sched.run()}
+    solo = PagedEngine(cfg, params, n_pages=33, page_size=8, max_seqs=4,
+                       max_pages_per_seq=8)
+    ref_s = Scheduler(solo, prefill_chunk=8, decode_horizon=8)
+    ref_s.add_request(prompts[0], 4, rid=0)
+    assert out == {r.rid: r.out for r in ref_s.run()}
+    assert eng.pages_in_use == 0
+    assert plan.stats["unresolved"] == 0
+    install_faults(eng.alloc, None)
+    eng.alloc.attach_tracer(None)
+    summary = check_trace(telem.tracer.events)
+    assert summary["faults_unresolved"] == 0
+    assert summary["n_shed"] == exhaust          # the shed's recover events
+    # after DEGRADE_TICKS quiet ticks the horizon cap lifts again
+    while sched.stats["steps"] < sched._degrade_until:
+        sched.step()
+    assert sched.effective_horizon == sched.decode_horizon
+
+
+# --------------------------------------------------------------------------
+# crash recovery: snapshots + journal replay, bit-exact restart
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("damage", [None, "bitflip"])
+def test_crash_recovery_bit_exact(stack, tmp_path, damage):
+    """Kill the engine mid-run; rebuild a FRESH one from the newest intact
+    snapshot plus the telemetry journal (post-snapshot arrivals carry
+    their prompt in the ``arrive`` event).  The merged outputs are
+    bit-identical to the uninterrupted run — even when a snapshot leg is
+    corrupted on disk: the image checksum rejects it and that request
+    degrades to exact re-prefill."""
+    cfg, params = stack
+    rng = np.random.default_rng(11)
+    reqs = [(rng.integers(0, cfg.vocab, int(rng.integers(4, 10))).tolist(),
+             int(rng.integers(8, 16))) for _ in range(5)]
+
+    def mk(telem=None):
+        eng = PagedEngine(cfg, params, n_pages=33, page_size=8, max_seqs=3,
+                          max_pages_per_seq=8)
+        return eng, Scheduler(eng, prefill_chunk=8, decode_horizon=4,
+                              telemetry=telem)
+
+    # the uninterrupted reference (greedy decode is schedule-invariant)
+    _, ref_s = mk()
+    for i, (p, m) in enumerate(reqs):
+        ref_s.add_request(p, m, rid=i)
+    ref = {r.rid: r.out for r in ref_s.run()}
+
+    # the run that will crash: journaled arrivals, periodic snapshots
+    telem = Telemetry(trace=True)
+    _, sched = mk(telem)
+    for i, (p, m) in enumerate(reqs[:4]):
+        sched.add_request(p, m, rid=i)
+    snap = ServeSnapshotter(sched, tmp_path, every=3, keep=2)
+    for _ in range(6):
+        sched.step()
+        snap.tick()
+    assert snap.snapshots >= 1
+    # one request arrives AFTER the last snapshot: only the journal has it
+    sched.add_request(reqs[4][0], reqs[4][1], rid=4)
+    sched.step()
+    journal = list(telem.tracer.events)
+    # -- crash: nothing below touches `sched` or its engine ------------------
+    if damage == "bitflip":
+        from repro.checkpoint.checkpoint import latest_step
+        step_dir = tmp_path / f"step_{latest_step(tmp_path)}"
+        manifest = json.loads((step_dir / "manifest.json").read_text())
+        kv = [e for e in manifest["leaves"] if "_k" in e["key"]]
+        assert kv, "no live slot in the snapshot — nothing to damage"
+        path = step_dir / kv[0]["file"]
+        raw = bytearray(path.read_bytes())
+        raw[-1] ^= 0x01                          # payload, not the header
+        path.write_bytes(bytes(raw))
+    telem2 = Telemetry(trace=True)
+    eng2, s2 = mk(telem2)
+    finished = recover_scheduler(s2, tmp_path, journal=journal)
+    out = dict(finished)
+    out.update({r.rid: r.out for r in s2.run()})
+    assert out == ref, "restart diverged from the uninterrupted run"
+    assert eng2.pages_in_use == 0
+    eng2.alloc.attach_tracer(None)
+    # the restored run's own trace replays clean: snapshot-provenance
+    # imports are marked external, so the checker doesn't demand an
+    # in-trace export that happened before the crash
+    summary = check_trace(telem2.tracer.events)
+    assert summary["live_blocks"] == 0
+    assert summary["images_in_flight"] == 0

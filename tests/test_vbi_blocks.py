@@ -26,8 +26,11 @@ import numpy as np
 import pytest
 
 from repro.core.vbi.address_space import VBProps
-from repro.core.vbi.blocks import (LegacyKVAllocator, PagePool, VBIAllocator)
+from repro.core.vbi.blocks import (ImageIntegrityError, LegacyKVAllocator,
+                                   PagePool, VBIAllocator)
 from repro.core.vbi.kvcache import PagedKVManager, reserve_positions
+from repro.serve.faults import FaultPlan, install_faults
+from repro.serve.recovery import retry_call
 from repro.serve.telemetry import TraceRecorder, check_trace
 
 
@@ -124,6 +127,12 @@ def test_refcount_conservation_random_traces(flavor):
         # purely from the emitted trace afterwards (DESIGN.md §10)
         rec = TraceRecorder(clock=lambda: 0.0)
         al.attach_tracer(rec)
+        # the fault plane (serve/faults.py, DESIGN.md §12) rides the same
+        # sweep: an all-zero-rate plan means nothing fires unless an op
+        # below force()s it, so the normal ops stay exactly as they were
+        # while the fault_* ops inject one fault each and recover from it
+        plan = FaultPlan({}, seed=seed)
+        install_faults(al, plan)
         blocks = []                  # every block ever allocated
         ledger = []                  # pages on the cache ledger
         pinned_by = {}               # ledger page -> mapping live blocks
@@ -143,7 +152,8 @@ def test_refcount_conservation_random_traces(flavor):
                              "map_shared", "cow", "release_cache",
                              "swap_out", "swap_in", "free", "double_free",
                              "stage_ahead", "arrive",
-                             "handoff_out", "handoff_in"])
+                             "handoff_out", "handoff_in",
+                             "fault_alloc", "fault_swap", "fault_import"])
             if op == "alloc" and free_slots:
                 blocks.append(al.alloc(int(rng.choice(free_slots))))
             elif op == "feed" and quiet:
@@ -243,6 +253,69 @@ def test_refcount_conservation_random_traces(flavor):
                     images.remove(img)
                     blocks.append(al.import_image(
                         img, int(rng.choice(free_slots))))
+            elif op == "fault_alloc" and quiet:
+                # injected transient pool exhaustion (DESIGN.md §12): the
+                # forced fault fires on reserve's growth path, the bounded
+                # retry clears it, and the block then advances exactly as
+                # a clean feed would — conservation must not notice
+                blk = quiet[rng.integers(len(quiet))]
+                n = min(int(rng.integers(1, ps * 2 + 1)),
+                        rowP * ps - blk.n_tokens)
+                need = (al.pages_for(blk.n_tokens + n) - blk.shared_pages
+                        - blk.reserved_pages)
+                if n > 0 and 0 < need <= al.free_pages:
+                    plan.force("alloc")
+                    _, fired = retry_call(
+                        lambda b=blk, t=blk.n_tokens + n: al.reserve(b, t))
+                    plan.resolve(fired, "retry_ok", tracer=rec)
+                    _feed(pool, al, blk, n)
+            elif op == "fault_swap":
+                # injected host-tier I/O failure, both directions; forced
+                # only when the op would actually reach its fault point
+                # (swap_out's sits after the eligibility checks)
+                if quiet and al.swap is not None:
+                    blk = quiet[rng.integers(len(quiet))]
+                    charge = (al.pages_for(blk.n_tokens)
+                              + getattr(pool, "aux_swap_pages", 0))
+                    if (blk.swappable and not blk.pinned and blk.n_tokens > 0
+                            and al.swap.can_hold(charge)):
+                        plan.force("swap_out")
+                        ok, fired = retry_call(lambda b=blk: al.swap_out(b))
+                        plan.resolve(fired, "retry_ok", tracer=rec)
+                        assert ok
+                        for bids in pinned_by.values():
+                            bids.discard(blk.bid)
+                elif swapped and free_slots:
+                    blk = swapped[rng.integers(len(swapped))]
+                    if al.pages_for(blk.n_tokens) <= al.free_pages:
+                        plan.force("swap_in")
+                        _, fired = retry_call(
+                            lambda b=blk, s=int(rng.choice(free_slots)):
+                            al.swap_in(b, s))
+                        plan.resolve(fired, "retry_ok", tracer=rec)
+            elif op == "fault_import" and images and free_slots:
+                # in-transit image damage (DESIGN.md §12): a forced loss
+                # is cleared by retransmission (the retry — import is
+                # idempotent); a forced corruption is caught by the
+                # checksum, the import rejected with NOTHING charged, and
+                # the caller drops the image (accounted fallback)
+                img = images[rng.integers(len(images))]
+                if img.n_pages <= al.free_pages:
+                    images.remove(img)
+                    slot = int(rng.choice(free_slots))
+                    if rng.random() < 0.5:
+                        plan.force("image_loss")
+                        blk, fired = retry_call(
+                            lambda i=img, s=slot: al.import_image(i, s))
+                        plan.resolve(fired, "retry_ok", tracer=rec)
+                        blocks.append(blk)
+                    else:
+                        plan.force("image_corrupt")
+                        with pytest.raises(ImageIntegrityError) as ei:
+                            al.import_image(img, slot)
+                        al.drop_image(img)
+                        plan.resolve([ei.value.fault_id], "fallback",
+                                     tracer=rec, detail="dropped")
             elif op == "stage_ahead" and quiet:
                 # overlap staging (DESIGN.md §9): the worst-case K-token
                 # span is charged to the mirror while the (simulated)
@@ -294,6 +367,9 @@ def test_refcount_conservation_random_traces(flavor):
             al.free(blk)
         assert al.pages_in_use == 0
         assert al.free_pages == int(pool.state.free_top) == pool.n_pages - 1
+        # every injected fault was resolved (retry_ok or accounted
+        # fallback) — custody balances after recovery, not despite it
+        assert plan.stats["unresolved"] == 0
         # the offline checker replays the recorded events and must agree
         # that this drained run conserved pages end to end
         summary = check_trace(rec.events)
@@ -301,6 +377,8 @@ def test_refcount_conservation_random_traces(flavor):
         assert summary["live_blocks"] == 0 and summary["ledger_pages"] == 0
         assert summary["swap_pages_held"] == 0
         assert summary["images_in_flight"] == 0
+        assert summary["faults_unresolved"] == 0
+        assert summary["n_faults"] == sum(plan.fired.values())
 
 
 def test_swap_out_respects_declared_properties():
@@ -473,8 +551,12 @@ def test_raw_page_ops_gated_to_core_vbi():
     through the engine + allocator, so horizon code cannot grow a side
     channel around the reservation protocol.  The migration boundary
     (DESIGN.md §11) is gated the same way: ``export_image`` /
-    ``import_image`` may be called only from ``serve/`` — BlockImages
-    cross pools through the serving schedulers, nowhere else."""
+    ``import_image`` / ``snapshot_image`` / ``drop_image`` may be called
+    only from ``serve/`` — BlockImages cross pools through the serving
+    schedulers, nowhere else.  And the fault plane (DESIGN.md §12) has
+    exactly one door of its own: ``attach_faults`` is reachable only via
+    ``serve/faults.py::install_faults``, so no scheduler or bench can
+    grow a private fault-injection hook."""
     root = pathlib.Path(__file__).resolve().parent.parent
     # every raw PagedServeState lifecycle op, incl. the RING/RECURRENT aux
     # snapshot/restore pair (DESIGN.md §8)
@@ -486,7 +568,10 @@ def test_raw_page_ops_gated_to_core_vbi():
     fast_pat = re.compile(
         r"\b(reserve_positions|write_token_kv|fused_decode_scan)\b")
     # the handoff boundary: only serving schedulers move BlockImages
-    img_pat = re.compile(r"\.(export_image|import_image)\s*\(")
+    img_pat = re.compile(
+        r"\.(export_image|import_image|snapshot_image|drop_image)\s*\(")
+    # the fault plane's one door (DESIGN.md §12)
+    fault_pat = re.compile(r"\.attach_faults\s*\(")
     bad = []
     for base in ("src/repro", "benchmarks"):
         for p in sorted((root / base).rglob("*.py")):
@@ -498,6 +583,8 @@ def test_raw_page_ops_gated_to_core_vbi():
                         fast_pat.search(line)
                         and rel != "src/repro/serve/engine.py") or (
                         img_pat.search(line)
-                        and not rel.startswith("src/repro/serve/")):
+                        and not rel.startswith("src/repro/serve/")) or (
+                        fault_pat.search(line)
+                        and rel != "src/repro/serve/faults.py"):
                     bad.append(f"{rel}:{i}: {line.strip()}")
     assert not bad, "raw page ops outside core/vbi/:\n" + "\n".join(bad)
