@@ -32,6 +32,14 @@
 # The `check-vbi-api` gate also pins the fault plane's one door:
 # attach_faults is reachable only via serve/faults.py::install_faults,
 # and snapshot_image/drop_image only from serve/.
+# `make bench-serve-mesh` runs the mesh-sharded decode scaling bench
+# (DESIGN.md §13): one worker subprocess per mesh size {1,2,4} (device
+# count is fixed at jax init, so sizes cannot share a process), decode
+# tok/s + bit-exact outputs vs the 1-device engine + predicted-vs-
+# measured comms share + mixtral EP per-device expert FLOPs to
+# BENCH_serving.json::mesh, with the 4-device placement-carrying trace
+# replayed through the offline checker.  Benchmark traces land under
+# benchmarks/results/, never at the repo root.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -39,7 +47,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 .PHONY: test test-slow check-vbi-api check-trace bench-serve \
 	bench-serve-prefix bench-serve-swap bench-serve-horizon \
 	bench-serve-window bench-serve-traffic bench-serve-disagg \
-	bench-serve-chaos bench serve-demo
+	bench-serve-chaos bench-serve-mesh bench serve-demo
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -74,23 +82,33 @@ bench-serve-window:
 	    --workload long-decode-window
 
 bench-serve-traffic:
-	$(PYTHON) -m benchmarks.bench_traffic --smoke --trace serve_trace.jsonl
-	$(PYTHON) -m repro.serve.telemetry serve_trace.jsonl
+	$(PYTHON) -m benchmarks.bench_traffic --smoke \
+	    --trace benchmarks/results/serve_trace.jsonl
+	$(PYTHON) -m repro.serve.telemetry benchmarks/results/serve_trace.jsonl
 
 bench-serve-disagg:
 	$(PYTHON) -m benchmarks.bench_disagg --smoke \
-	    --trace serve_trace_disagg.jsonl
-	$(PYTHON) -m repro.serve.telemetry serve_trace_disagg.jsonl
+	    --trace benchmarks/results/serve_trace_disagg.jsonl
+	$(PYTHON) -m repro.serve.telemetry \
+	    benchmarks/results/serve_trace_disagg.jsonl
 
 bench-serve-chaos:
 	$(PYTHON) -m benchmarks.bench_chaos --smoke \
-	    --trace serve_trace_chaos.jsonl
-	$(PYTHON) -m repro.serve.telemetry serve_trace_chaos.jsonl
+	    --trace benchmarks/results/serve_trace_chaos.jsonl
+	$(PYTHON) -m repro.serve.telemetry \
+	    benchmarks/results/serve_trace_chaos.jsonl
+
+bench-serve-mesh:
+	$(PYTHON) -m benchmarks.bench_mesh --smoke \
+	    --trace benchmarks/results/serve_trace_mesh.jsonl
+	$(PYTHON) -m repro.serve.telemetry \
+	    benchmarks/results/serve_trace_mesh.jsonl
 
 # replay a recorded telemetry trace (TRACE=path/to/run.jsonl) against the
 # allocator conservation invariants; add --chrome for a Perfetto view
 check-trace:
-	$(PYTHON) -m repro.serve.telemetry $(or $(TRACE),serve_trace.jsonl)
+	$(PYTHON) -m repro.serve.telemetry \
+	    $(or $(TRACE),benchmarks/results/serve_trace.jsonl)
 
 bench:
 	$(PYTHON) -m benchmarks.run

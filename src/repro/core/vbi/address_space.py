@@ -96,6 +96,12 @@ class VBProps(enum.IntFlag):
     RECURRENT = 1 << 17         # constant size: per-slot recurrent state
     #                             (RG-LRU h / SSM state), snapshot/restore
     #                             is a dense copy, zero per-token growth
+    # the placement axis (DESIGN.md §13): which device(s) a block's pages
+    # physically live on is itself a declared data property — stamped by
+    # VBIAllocator.place_block, carried on every trace op
+    SHARDED = 1 << 18           # pages distributed across >1 mesh device
+    #                             (addressing stays global: one page table,
+    #                             gathers must name their source devices)
 
 
 @dataclasses.dataclass

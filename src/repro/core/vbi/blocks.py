@@ -70,6 +70,11 @@ class VirtualBlock:
     shared_pages: int = 0
     status: str = "resident"            # resident | swapped | exported | freed
     vbid: int = -1                      # MTL VB id while resident
+    # the placement axis (DESIGN.md §13): which devices the block's pages
+    # physically live on — a declared data property like RING/PINNED, set
+    # via VBIAllocator.place_block, never by callers directly.  Empty
+    # until placed; >1 entry means the pages are mesh-sharded.
+    placement: tuple = ()
 
     @property
     def pinned(self) -> bool:
@@ -99,7 +104,9 @@ class PagePool:
                  n_kv: int, head_dim: int, max_seqs: int,
                  max_pages_per_seq: int, dtype=jnp.float32,
                  ring_layers: int = 0, ring_pages: int = 0,
-                 rg_layers: int = 0, rnn_width: int = 0):
+                 rg_layers: int = 0, rnn_width: int = 0,
+                 placement: Sequence[str] = ()):
+        self.placement = tuple(placement)
         self.n_pages = n_pages
         self.page_size = page_size
         self.max_seqs = max_seqs
@@ -259,6 +266,13 @@ class VBIAllocator:
                  mtl: Optional[MTL] = None):
         self.pool = pool
         self.mtl = mtl or MTL(PhysicalMemory(1 << 12))
+        # the pool's device set: the default placement every block carved
+        # from it is stamped with (place_block).  Single-device pools get
+        # their one local device so placement is uniform across traces.
+        self.placement = tuple(getattr(pool, "placement", ()) or ())
+        if not self.placement:
+            d = jax.devices()[0]
+            self.placement = (f"{d.platform}:{d.id}",)
         self.free_pages = pool.n_pages - 1          # host mirror (page 0 null)
         self.blocks: Dict[int, VirtualBlock] = {}   # resident, by slot
         self.swap = (HostSwapTier(host_swap_pages) if host_swap_pages > 0
@@ -314,7 +328,25 @@ class VBIAllocator:
             fields.setdefault("bid", blk.bid)
             fields.setdefault("slot", blk.slot)
             fields["props"] = int(blk.props)
+            if blk.placement:
+                fields.setdefault("placement", list(blk.placement))
         t.block_op(op, **fields)
+
+    def place_block(self, block: VirtualBlock,
+                    placement: Optional[Sequence[str]] = None) -> None:
+        """Stamp the device set the block's pages physically live on — the
+        placement axis (DESIGN.md §13).  Addressing stays global (one page
+        table); placement travels with the block like any other declared
+        property: every later trace op carries it, gathers record their
+        source devices, and the offline checker rejects a gather from a
+        device the block was never placed on."""
+        block.placement = tuple(placement if placement is not None
+                                else self.placement)
+        if len(block.placement) > 1:
+            block.props |= VBProps.SHARDED
+        else:
+            block.props &= ~VBProps.SHARDED
+        self._trace("place", block)
 
     # -- fault plane (serve/faults.py, DESIGN.md §12) -------------------------
     def attach_faults(self, faults) -> None:
@@ -377,6 +409,7 @@ class VBIAllocator:
         self.blocks[slot] = blk
         self.stats["allocs"] += 1
         self._trace("alloc", blk)
+        self.place_block(blk)
         return blk
 
     def free(self, block: VirtualBlock) -> None:
@@ -567,7 +600,8 @@ class VBIAllocator:
         self.stats["swap_bytes_out"] += n_bytes
         self._trace("swap_out", block, n_pages=n_pages, charge=charge,
                     freed_reserved=block.reserved_pages, bytes=n_bytes,
-                    n_tokens=block.n_tokens)
+                    n_tokens=block.n_tokens,
+                    gathered_from=list(self.placement))
         self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
         self.mtl.disable_vb(0, block.vbid)
         self.free_pages += block.reserved_pages
@@ -623,6 +657,7 @@ class VBIAllocator:
         self.stats["swap_bytes_in"] += n_bytes
         self._trace("swap_in", block, n_pages=img.n_pages, charge=img.charge,
                     reserve=need, bytes=n_bytes, n_tokens=img.n_tokens)
+        self.place_block(block)
         return block
 
     # -- block-image handoff (disaggregated serving, DESIGN.md §11) -----------
@@ -662,7 +697,8 @@ class VBIAllocator:
         img.checksum = img.compute_checksum()
         self._trace("export_image", block, n_pages=n_pages, charge=charge,
                     freed_reserved=block.reserved_pages, bytes=img.nbytes,
-                    n_tokens=block.n_tokens)
+                    n_tokens=block.n_tokens,
+                    gathered_from=list(self.placement))
         self.pool.state = release_slot(self.pool.state, jnp.int32(block.slot))
         self.mtl.disable_vb(0, block.vbid)
         self.free_pages += block.reserved_pages
@@ -739,7 +775,8 @@ class VBIAllocator:
         img.checksum = img.compute_checksum()
         self.stats["image_snapshots"] += 1
         self._trace("snapshot_image", block, n_pages=n_pages,
-                    bytes=img.nbytes, n_tokens=block.n_tokens)
+                    bytes=img.nbytes, n_tokens=block.n_tokens,
+                    gathered_from=list(self.placement))
         return img
 
     def import_image(self, img: BlockImage, slot: int,
@@ -818,6 +855,7 @@ class VBIAllocator:
                     charge=img.charge, reserve=need, bytes=img.nbytes,
                     n_tokens=img.n_tokens, img_bid=img.src_bid,
                     img_pool=img.src_pool, img_external=external)
+        self.place_block(blk)
         return blk
 
 

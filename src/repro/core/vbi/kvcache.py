@@ -219,6 +219,26 @@ class PagedServeState:
         return self.page_table.shape[1]
 
 
+# Which dim of each pool leaf may shard over the mesh 'model' axis, in
+# preference order (DESIGN.md §13).  The KV pools try the n_kv dim first
+# (head-parallel attention: reads stay local), then head_dim; recurrent
+# state shards its width/heads/channels.  Translation state (page_table,
+# seq_lens, free stack, refcounts) is deliberately ABSENT: the page table
+# is the one logical VBI address space and stays replicated — blocks are
+# physically distributed, addressing is global.  Consumed by
+# ``distributed/sharding.py::serve_state_specs``; kept here, next to the
+# state definition, so the shapes and the sharding contract cannot drift
+# apart.
+SERVE_STATE_SHARD_DIMS = {
+    "k_pages": (3, 4), "v_pages": (3, 4),       # [L, P, ps, n_kv, hd]
+    "k_ring": (3, 4), "v_ring": (3, 4),         # [L, rows, ps, n_kv, hd]
+    "rg_h": (2,),                               # [L, S, rnn_width]
+    "rg_conv": (3,),                            # [L, S, cw-1, rnn_width]
+    "ssm_state": (2,),                          # [L, S, H, P, N]
+    "ssm_conv": (3,),                           # [L, S, cw-1, ch]
+}
+
+
 def init_serve_state(n_layers: int, n_pages: int, page_size: int, n_kv: int,
                      head_dim: int, max_seqs: int, max_pages_per_seq: int,
                      dtype=jnp.float32, n_ring_layers: int = 0,

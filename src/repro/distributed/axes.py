@@ -65,4 +65,8 @@ def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
             spec.append(ax)
         else:
             spec.append(None)
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    # NamedSharding, not a bare PartitionSpec: the serve engine traces
+    # inside jit with no ambient `with mesh:` scope, and a bare spec
+    # would demand one
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec)))

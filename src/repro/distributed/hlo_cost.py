@@ -314,3 +314,12 @@ def analyze_hlo(hlo_text: str) -> dict:
             "bytes_min": total.bytes_min,
             "collectives": {**total.coll, "total": coll_total},
             "collective_counts": total.coll_counts}
+
+
+def comms_share(report: dict) -> float:
+    """Predicted fraction of memory traffic spent on collectives — the
+    layout-selection figure of merit (DESIGN.md §13): collective bytes
+    over collective + compute bytes, in [0, 1)."""
+    coll = report["collectives"]["total"]
+    denom = coll + max(report["bytes"], 1.0)
+    return coll / denom if denom else 0.0

@@ -58,6 +58,24 @@ def _local_combine(out_e, idx, T: int) -> jax.Array:
                      ).at[tok].add(gathered * w[:, None])
 
 
+def ep_capacity(cfg, mesh: Mesh, B: int, S: int) -> Tuple[int, int]:
+    """(cap, T_loc) that ``moe_ep`` will use for an [B, S, d] input.
+
+    Serving requires cap ≥ T_loc (no token may be capacity-dropped, or
+    decode would diverge from the dense reference); the engine bumps
+    ``capacity_factor`` to E/K to guarantee it, and the mesh tests
+    assert it (ISSUE 10 satellite 2)."""
+    E, K = cfg.n_experts, cfg.top_k
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_b = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    n_m = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    ep = E % n_m == 0 and n_m > 1
+    tok_over_model = ep and S % n_m == 0
+    T_loc = (B // n_b) * (S // (n_m if tok_over_model else 1))
+    cap = int(max(1, round(T_loc * K / E * cfg.capacity_factor)))
+    return cap, T_loc
+
+
 def moe_ep(params, x, cfg, mesh: Mesh) -> jax.Array:
     """x: [B, S, d] → [B, S, d], dispatched expert-parallel on ``mesh``.
 
@@ -75,8 +93,7 @@ def moe_ep(params, x, cfg, mesh: Mesh) -> jax.Array:
     # different d_ff slice of the same tokens); only EP splits tokens there.
     tok_over_model = ep and S % n_m == 0
     n_shards = n_b * (n_m if tok_over_model else 1)
-    T_loc = (B // n_b) * (S // (n_m if tok_over_model else 1))
-    cap = int(max(1, round(T_loc * K / E * cfg.capacity_factor)))
+    cap, T_loc = ep_capacity(cfg, mesh, B, S)
 
     bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
     sspec = "model" if tok_over_model else None

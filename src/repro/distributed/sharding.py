@@ -211,6 +211,58 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh, batch: int):
     return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
 
 
+def serve_state_specs(state, mesh: Mesh, kv_layout: str = "shard"):
+    """PartitionSpec pytree for a ``PagedServeState`` (DESIGN.md §13).
+
+    The page *table* and every other translation leaf stay replicated —
+    the VBI address space is one logical space, host-global — while the
+    physical pools (KV pages, ring frames, recurrent state) shard over
+    the ``model`` axis.  Candidate dims per leaf come from
+    ``core/vbi/kvcache.py::SERVE_STATE_SHARD_DIMS`` (next to the state
+    definition); the first candidate where ``shape[d]`` is divisible by
+    and at least the axis size wins, otherwise the leaf is replicated.
+    ``kv_layout='replicate'`` keeps everything replicated (the hlo_cost
+    auto-layout probe compares both).
+    """
+    from ..core.vbi.kvcache import SERVE_STATE_SHARD_DIMS
+    n_m = _axis_size(mesh, "model")
+    fields = type(state).__dataclass_fields__ \
+        if hasattr(type(state), "__dataclass_fields__") else {}
+    specs = {}
+    for name in fields:
+        leaf = getattr(state, name)
+        nd = len(getattr(leaf, "shape", ()))
+        spec = P(*((None,) * nd))
+        if kv_layout == "shard" and n_m > 1:
+            for d in SERVE_STATE_SHARD_DIMS.get(name, ()):
+                size = leaf.shape[d] if d < nd else 0
+                if size >= n_m and size % n_m == 0:
+                    axes = [None] * nd
+                    axes[d] = "model"
+                    spec = P(*axes)
+                    break
+        specs[name] = spec
+    return specs
+
+
+def shard_serve_state(state, mesh: Mesh, kv_layout: str = "shard"):
+    """Place a ``PagedServeState``'s leaves by ``serve_state_specs``.
+
+    Returns ``(state, shardings)`` where ``shardings`` is a state-shaped
+    pytree of ``NamedSharding`` suitable for ``jax.device_put`` re-pinning
+    and jit ``out_shardings``.
+    """
+    import dataclasses as _dc
+
+    specs = serve_state_specs(state, mesh, kv_layout)
+    shardings = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+    placed = _dc.replace(state, **{
+        k: jax.device_put(getattr(state, k), sh)
+        for k, sh in shardings.items()})
+    sharding_tree = _dc.replace(state, **shardings)
+    return placed, sharding_tree
+
+
 def placement_hint(props: VBProps) -> dict:
     """Data-aware mapping hints from VBI property bits (Sec. 3.6.3 analogue):
     latency-sensitive → replicate close; bandwidth-sensitive → shard wide;

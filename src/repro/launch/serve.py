@@ -130,6 +130,20 @@ def main(argv=None) -> None:
                          "batched gather, default) or 'kernel' (the Pallas "
                          "paged-attention kernel — lowers for real on TPU, "
                          "interpret mode elsewhere)")
+    ap.add_argument("--mesh-shape", default=None, metavar="DATAxMODEL",
+                    help="serve on a device mesh, e.g. '1x4' = 4-way "
+                         "model-axis sharding (DESIGN.md §13): KV pools, "
+                         "ring frames and recurrent state shard over "
+                         "'model', the page table / allocator / scheduler "
+                         "stay host-global; MoE stacks dispatch expert-"
+                         "parallel.  Needs that many devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on CPU)")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=("auto", "shard", "replicate"),
+                    help="pool layout on a >1-device mesh: 'auto' picks by "
+                         "the hlo_cost-predicted collective bytes of the "
+                         "compiled decode step")
     ap.add_argument("--traffic", default=None,
                     choices=("poisson", "bursty"),
                     help="open-loop continuous traffic (DESIGN.md §9): a "
@@ -196,6 +210,31 @@ def main(argv=None) -> None:
     if args.legacy and (args.faults or args.fault_model):
         ap.error("--faults needs the VBI allocator boundaries "
                  "(drop --legacy)")
+    mesh = None
+    if args.mesh_shape is not None:
+        if args.legacy:
+            ap.error("--mesh-shape needs the jitted engine path "
+                     "(drop --legacy)")
+        try:
+            data, model = (int(x) for x in args.mesh_shape.split("x"))
+        except ValueError:
+            ap.error(f"--mesh-shape must look like '1x4', "
+                     f"got {args.mesh_shape!r}")
+        if data * model > jax.device_count():
+            ap.error(f"--mesh-shape {args.mesh_shape} needs {data * model} "
+                     f"devices but only {jax.device_count()} exist — on "
+                     f"CPU set XLA_FLAGS=--xla_force_host_platform_device_"
+                     f"count={data * model}")
+        if model > 1 and args.attn_impl == "kernel":
+            # fail loudly HERE: the Pallas kernel is not sharding-aware,
+            # and letting it through would crash deep inside jit (or
+            # silently gather the whole pool per device)
+            ap.error("--attn-impl kernel is not supported on a >1-device "
+                     "mesh: the Pallas paged-attention kernel assumes a "
+                     "single-device page pool. Use --attn-impl gather, or "
+                     "--mesh-shape 1x1.")
+        from .mesh import make_host_mesh
+        mesh = make_host_mesh(data=data, model=model)
 
     cfg = serve_config(args.arch, args.smoke)
     if args.legacy and (cfg.family not in ("dense", "vlm")
@@ -224,25 +263,33 @@ def main(argv=None) -> None:
                 max_seqs=args.prefill_slots,
                 n_pages=1 + args.prefill_slots * (8 + args.shared_prefix
                                                   // page_size),
-                attn_impl=args.attn_impl)
+                attn_impl=args.attn_impl, mesh=mesh,
+                kv_layout=args.kv_layout)
             engine = PagedEngine(
                 cfg, params, page_size=page_size,
                 max_seqs=args.decode_slots,
                 n_pages=1 + args.decode_slots * (32 + args.shared_prefix
                                                  // page_size),
                 host_swap_pages=args.host_swap_pages,
-                attn_impl=args.attn_impl)
+                attn_impl=args.attn_impl, mesh=mesh,
+                kv_layout=args.kv_layout)
         else:
             engine = PagedEngine(
                 cfg, params, page_size=page_size, max_seqs=args.batch_slots,
                 n_pages=1 + args.batch_slots * (32 + args.shared_prefix
                                                 // page_size),
                 host_swap_pages=args.host_swap_pages,
-                attn_impl=args.attn_impl)
+                attn_impl=args.attn_impl, mesh=mesh,
+                kv_layout=args.kv_layout)
         g = engine.geom
         print(f"[serve] {cfg.name}: layer kinds full={g.n_full} "
               f"ring={g.n_ring} (window={g.window}) rglru={g.n_rg} "
               f"ssm={g.n_ssm} — attn_impl={args.attn_impl}")
+        if mesh is not None:
+            print(f"[serve] mesh {dict(mesh.shape)}: kv_layout="
+                  f"{engine.kv_layout}, placement={engine.placement}")
+            if engine.layout_report is not None:
+                print(f"[serve] layout probe: {engine.layout_report}")
         cache = (None if args.no_prefix_cache
                  else PrefixCache(page_size=page_size))
         if cache is not None and not engine.supports_prefix_sharing:

@@ -219,6 +219,16 @@ def moe(params, x, cfg):
                 xm = x.reshape(n_b * s_div, (B // n_b) * (S // s_div), d)
                 y = moe_ep(params, xm, cfg, mesh)
                 return y.reshape(B, S, d)
+            n_m = mesh.shape.get("model", 1)
+            if (S == 1 and B > 1 and n_b == 1 and n_m > 1
+                    and cfg.n_experts % n_m == 0 and B % n_m == 0):
+                # serve decode shape [slots, 1, d]: transpose to
+                # [1, slots, d] so moe_ep token-shards the slot dim over
+                # 'model' — each device routes only its B/n_m slots, so
+                # per-device expert rows drop n_m-fold vs the
+                # replicated-token fallback it would otherwise take.
+                y = moe_ep(params, x.reshape(1, B, d), cfg, mesh)
+                return y.reshape(B, S, d)
             return moe_ep(params, x, cfg, mesh)
         # tiny token counts (batch-1 decode): local path is negligible
     return _moe_local(params, x.reshape(B * S, d), cfg).reshape(B, S, d)

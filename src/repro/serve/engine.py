@@ -56,6 +56,7 @@ static row and ``min(seq_len, window)``.
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -63,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.vbi.address_space import VBProps
 from ..core.vbi.blocks import VBIAllocator
@@ -339,8 +341,27 @@ class PagedEngine:
                  page_size: int = 16, max_seqs: int = 8,
                  max_pages_per_seq: Optional[int] = None,
                  attn_impl: str = "gather", mtl: Optional[MTL] = None,
-                 host_swap_pages: int = 0, eos_id: int = -1):
+                 host_swap_pages: int = 0, eos_id: int = -1,
+                 mesh: Optional[Mesh] = None, kv_layout: str = "auto"):
         assert attn_impl in ("gather", "kernel")
+        assert kv_layout in ("auto", "shard", "replicate")
+        if mesh is not None and mesh.devices.size > 1 \
+                and attn_impl == "kernel":
+            raise ValueError(
+                "attn_impl='kernel' is not sharding-aware: the Pallas "
+                "paged-attention kernel assumes a single-device page pool "
+                "and would crash (or silently gather the whole pool) "
+                "inside jit on a sharded mesh. Use attn_impl='gather' on "
+                "a >1-device mesh.")
+        if mesh is not None and cfg.n_experts > 0:
+            # EP serving must never capacity-drop a token the dense
+            # reference keeps (it would diverge bit-wise); cap >= T_loc
+            # holds iff capacity_factor >= E/K (moe_ep.ep_capacity), and
+            # at the dense path's per-token groups the bump leaves cap
+            # unchanged — so dense vs EP outputs stay comparable.
+            cfg = dataclasses.replace(
+                cfg, capacity_factor=max(cfg.capacity_factor,
+                                         cfg.n_experts / cfg.top_k))
         geom = build_stack_geom(cfg, page_size)
         self.cfg = cfg
         self.geom = geom
@@ -377,14 +398,36 @@ class PagedEngine:
         # lanes (mirrors the main pool's null page)
         self.ring_table_np = make_ring_table(max_seqs, geom.ring_pages)
         ring_table = jnp.asarray(self.ring_table_np)
+        self.mesh = mesh
+        devs = (list(mesh.devices.flat) if mesh is not None
+                else jax.devices()[:1])
+        # placement is a *data property* of every block carved from this
+        # pool (DESIGN.md §13): the device set the block's pages
+        # physically live on.  One logical VBI address space (the page
+        # table stays host-global), physically distributed pages.
+        self.placement = tuple(f"{d.platform}:{d.id}" for d in devs)
         # the engine satisfies the allocator's pool protocol (.state + geom)
         self.alloc = VBIAllocator(self, host_swap_pages=host_swap_pages,
                                   mtl=mtl)
         self._step = partial(_token_step, cfg, geom, self.max_pages,
                              attn_impl, ring_table)
+        if mesh is not None:
+            from ..distributed.axes import logical_axes
+            from ..distributed.sharding import param_specs, shardings_of
+            # moe() reads the logical-axes contextvar at trace time to
+            # route mixtral through real EP dispatch (moe_ep) inside the
+            # scanned stack.
+            self._axes = partial(logical_axes, mesh, cfg.n_experts)
+            self._param_shardings = shardings_of(
+                param_specs(cfg, params, mesh), mesh)
+            self.params = jax.device_put(params, self._param_shardings)
+        else:
+            self._axes = nullcontext
+            self._param_shardings = None
 
         def _decode(params, state, tokens, slot_mask):
-            return self._step(params, state, tokens, slot_mask)
+            with self._axes():
+                return self._step(params, state, tokens, slot_mask)
 
         def _prefill(params, state, tokens, n_tokens):
             # tokens [S, C]; n_tokens [S] — valid prompt tokens this chunk.
@@ -392,20 +435,91 @@ class PagedEngine:
                 mask = (c < n_tokens) & st.slot_active
                 logits, st = self._step(params, st, tokens[:, c], mask)
                 return st, logits
-            state, logits_seq = lax.scan(tok, state,
-                                         jnp.arange(tokens.shape[1]))
-            # last *valid* logits per slot (slots finish at different c);
-            # argmax here so only [S] int32 ever needs to cross to the host
-            # — and only on chunks where some slot finished its prompt.
-            last = jnp.clip(n_tokens - 1, 0)
-            logits = logits_seq[last, jnp.arange(tokens.shape[0])]
-            return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), state
+            with self._axes():
+                state, logits_seq = lax.scan(tok, state,
+                                             jnp.arange(tokens.shape[1]))
+                # last *valid* logits per slot (slots finish at different
+                # c); argmax here so only [S] int32 ever needs to cross to
+                # the host — and only on chunks where some slot finished
+                # its prompt.
+                last = jnp.clip(n_tokens - 1, 0)
+                logits = logits_seq[last, jnp.arange(tokens.shape[0])]
+                return (jnp.argmax(logits[:, 0], -1).astype(jnp.int32),
+                        state)
+
+        # mesh layout: pools shard over 'model', translation replicated
+        # (sharding.py::serve_state_specs); 'auto' compiles both candidate
+        # layouts and keeps the one the HLO cost walker predicts cheaper
+        # in collective bytes (DESIGN.md §13).
+        self.kv_layout = None
+        self.layout_report = None
+        self._state_shardings = None
+        jit_kw: dict = {}
+        if mesh is not None:
+            from ..distributed.sharding import shard_serve_state
+            if kv_layout == "auto":
+                kv_layout = self._pick_layout(mesh, _decode)
+            self.kv_layout = kv_layout
+            self.state, self._state_shardings = shard_serve_state(
+                self.state, mesh, kv_layout)
+            self._rep = NamedSharding(mesh, P())
+            # out_shardings (not in_shardings) pin the layout across the
+            # donated chain; host-side lifecycle ops in between are
+            # re-pinned by _pin() on each fast-path entry.
+            jit_kw = dict(out_shardings=(self._rep, self._state_shardings))
+        self._jit_kw = jit_kw
 
         # the tentpole contract: ONE jitted dispatch per decode step,
         # KV state donated so the pool is updated in place.
-        self._decode = jax.jit(_decode, donate_argnums=(1,))
-        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+        self._decode = jax.jit(_decode, donate_argnums=(1,), **jit_kw)
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,), **jit_kw)
         self._decode_many: Dict[int, object] = {}   # horizon K -> jitted fn
+
+    def _pick_layout(self, mesh: Mesh, decode_fn) -> str:
+        """'auto' pool layout: AOT-compile the decode step under both
+        candidate layouts (ShapeDtypeStruct probes — no arrays moved) and
+        keep the one ``hlo_cost`` predicts cheaper in collective bytes."""
+        from ..distributed.hlo_cost import analyze_hlo, comms_share
+        from ..distributed.sharding import serve_state_specs
+        rep_sh = NamedSharding(mesh, P())
+        S = self.max_seqs
+        tok = jax.ShapeDtypeStruct((S,), jnp.int32, sharding=rep_sh)
+        msk = jax.ShapeDtypeStruct((S,), jnp.bool_, sharding=rep_sh)
+        p_sds = jax.tree.map(
+            lambda a, sh: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                               sharding=sh),
+            self.params, self._param_shardings)
+        reports = {}
+        for layout in ("shard", "replicate"):
+            specs = serve_state_specs(self.state, mesh, layout)
+            st_sds = dataclasses.replace(self.state, **{
+                k: jax.ShapeDtypeStruct(
+                    getattr(self.state, k).shape,
+                    getattr(self.state, k).dtype,
+                    sharding=NamedSharding(mesh, s))
+                for k, s in specs.items()})
+            hlo = jax.jit(decode_fn).lower(
+                p_sds, st_sds, tok, msk).compile().as_text()
+            r = analyze_hlo(hlo)
+            reports[layout] = {
+                "collective_bytes": r["collectives"]["total"],
+                "predicted_comms_share": comms_share(r),
+                "flops": r["flops"],
+            }
+        chosen = ("shard" if reports["shard"]["collective_bytes"]
+                  <= reports["replicate"]["collective_bytes"]
+                  else "replicate")
+        self.layout_report = {"chosen": chosen, "candidates": reports}
+        return chosen
+
+    def _pin(self) -> None:
+        """Re-pin ``self.state`` to the chosen layout.  Host-side VBI
+        lifecycle ops (admit/map/snapshot/restore…) run un-pinned jits
+        whose outputs may drift to default placement; ``device_put`` with
+        matching shardings is a no-op, so the fast path pays nothing when
+        nothing drifted."""
+        if self._state_shardings is not None:
+            self.state = jax.device_put(self.state, self._state_shardings)
 
     def attach_metrics(self, metrics) -> None:
         """Move the engine's dispatch counters onto a shared
@@ -448,6 +562,7 @@ class PagedEngine:
     def decode(self, tokens: jax.Array, slot_mask: jax.Array) -> jax.Array:
         """tokens [max_seqs] int32, slot_mask [max_seqs] bool →
         logits [max_seqs, 1, vocab].  No host transfer happens here."""
+        self._pin()
         logits, self.state = self._decode(self.params, self.state, tokens,
                                           slot_mask)
         self.stats["decode_steps"] += 1
@@ -458,10 +573,12 @@ class PagedEngine:
         """The K-step fused horizon, compiled once per distinct K."""
         if k not in self._decode_many:
             def _many(params, state, tokens, slot_mask, steps_left):
-                return fused_decode_scan(
-                    partial(self._step, params), state, tokens, slot_mask,
-                    steps_left, length=k, eos_id=self.eos_id)
-            self._decode_many[k] = jax.jit(_many, donate_argnums=(1,))
+                with self._axes():
+                    return fused_decode_scan(
+                        partial(self._step, params), state, tokens,
+                        slot_mask, steps_left, length=k, eos_id=self.eos_id)
+            self._decode_many[k] = jax.jit(_many, donate_argnums=(1,),
+                                           **self._jit_kw)
         return self._decode_many[k]
 
     def decode_many(self, tokens: jax.Array, slot_mask: jax.Array,
@@ -476,6 +593,7 @@ class PagedEngine:
         the block ONCE per horizon instead of once per token; page budget
         for the worst-case span must be reserved through ``self.alloc``
         before dispatch."""
+        self._pin()
         block, self.state = self._horizon_fn(k)(
             self.params, self.state, tokens, slot_mask, steps_left)
         self.stats["decode_steps"] += k
@@ -496,6 +614,7 @@ class PagedEngine:
         next greedy token per slot, [max_seqs] int32 *on device* (argmax of
         each slot's last fed position — the caller reads it back only when
         a slot actually finished its prompt this chunk)."""
+        self._pin()
         nxt, self.state = self._prefill(self.params, self.state, tokens,
                                         n_tokens)
         self.stats["prefill_chunks"] += 1

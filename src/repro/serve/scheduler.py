@@ -297,6 +297,15 @@ class Scheduler:
                 - self.prefix_cache.evictable_pages
                 if self.prefix_cache else 0),
         }
+        # per-placement occupancy (DESIGN.md §13): the pool's used pages
+        # attributed to each device of its placement set.  Sharded pools
+        # split a page's payload across all devices, so each device holds
+        # the full used count of page *slots* at 1/n the bytes; the gauge
+        # reports slot occupancy per device, still from host mirrors only.
+        placement = getattr(self.alloc, "placement", ())
+        used = self.engine.n_pages - 1 - al.free_pages
+        for dev in placement:
+            vals[f"placement.{dev}.pages_used"] = used
         for k, v in vals.items():
             self.metrics.gauge(k).set(v)
         if self.tracer is not None:

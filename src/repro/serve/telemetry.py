@@ -309,6 +309,10 @@ class TraceRecorder:
 
     # -- export --------------------------------------------------------------
     def write_jsonl(self, path: str) -> None:
+        import os
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
         with open(path, "w") as f:
             for ev in self.events:
                 f.write(json.dumps(ev) + "\n")
@@ -503,7 +507,12 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
         releases at all times;
       * swap charge is symmetric: each swap-in/free releases exactly the
         charge its swap-out paid, the tier never exceeds its capacity,
-        and a drained run ends with zero pages held everywhere.
+        and a drained run ends with zero pages held everywhere;
+      * the placement axis (DESIGN.md §13): ``place`` ops accumulate the
+        device set each block's pages were put on, and any op with a
+        ``gathered_from`` field (swap_out / export_image /
+        snapshot_image) must name only devices in that set — a gather
+        from a device the block never lived on cannot replay clean.
 
     A trace may hold SEVERAL pools' event streams (the disaggregated
     topology records both engines through pool-scoped tracer views,
@@ -601,10 +610,21 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
         op = ev["op"]
         bid = ev.get("bid")
         blk = blocks.get(bid)
+        # the placement axis (DESIGN.md §13): a gather must only read
+        # devices the block was actually placed on — a forged
+        # ``gathered_from`` cannot replay clean
+        gf = ev.get("gathered_from")
+        if gf is not None:
+            placed = blk.get("placed", set()) if blk is not None else set()
+            bad = sorted(d for d in gf if d not in placed)
+            if bad:
+                _fail(i, ev, f"gather from device(s) {bad} that bid {bid} "
+                      f"was never placed on (placed: {sorted(placed)})")
         if op == "alloc":
             if blk is not None and blk["status"] != "freed":
                 _fail(i, ev, f"bid {bid} allocated twice")
-            blocks[bid] = {"status": "resident", "reserved": 0, "charge": 0}
+            blocks[bid] = {"status": "resident", "reserved": 0, "charge": 0,
+                           "placed": set()}
         elif op in ("reserve", "unreserve", "commit", "map_shared",
                     "cow_break", "swap_out", "export_image", "free"):
             if blk is None:
@@ -699,7 +719,7 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
                 _fail(i, ev, f"import reserves {need} > {st['free']} free")
             st["free"] -= need
             blocks[bid] = {"status": "resident", "reserved": need,
-                           "charge": 0}
+                           "charge": 0, "placed": set()}
         elif op == "import_dedup":
             # retransmission of an already-imported image resolved against
             # the idempotency ledger: the live block must really be
@@ -717,6 +737,13 @@ def check_trace(events: Sequence[dict]) -> Dict[str, int]:
             # with it; dropping an external snapshot image has no in-trace
             # export to retire
             inflight.pop((ev.get("img_pool"), ev.get("img_bid")), None)
+        elif op == "place":
+            # placement stamp (VBIAllocator.place_block): the block's
+            # pages now live on these devices; the placed set accumulates
+            # so a later gather can name any device ever placed on
+            if blk is None or blk["status"] != "resident":
+                _fail(i, ev, f"place on non-resident bid {bid}")
+            blk.setdefault("placed", set()).update(ev.get("placement", ()))
         elif op == "retain":
             n = int(ev["n_pages"])
             fb = ev.get("from_bid")

@@ -31,18 +31,21 @@ from repro.core.vbi.blocks import (ImageIntegrityError, LegacyKVAllocator,
 from repro.core.vbi.kvcache import PagedKVManager, reserve_positions
 from repro.serve.faults import FaultPlan, install_faults
 from repro.serve.recovery import retry_call
-from repro.serve.telemetry import TraceRecorder, check_trace
+from repro.serve.telemetry import (TraceCheckError, TraceRecorder,
+                                   check_trace)
 
 
 def _mk(n_pages=33, page_size=2, max_seqs=4, rowP=8, swap=0,
-        n_layers=1, ring=0, rg=0):
+        n_layers=1, ring=0, rg=0, placement=()):
     """``ring``/``rg`` add RING / RECURRENT layer groups (DESIGN.md §8);
     ``n_layers=0`` makes a pool with NO full-attention layers (pure
-    bounded/constant footprint — page budget identically zero)."""
+    bounded/constant footprint — page budget identically zero).
+    ``placement`` declares the pool's device set (DESIGN.md §13): every
+    block allocated from it carries that placement as a data property."""
     pool = PagePool(n_layers=n_layers, n_pages=n_pages, page_size=page_size,
                     n_kv=1, head_dim=2, max_seqs=max_seqs,
                     max_pages_per_seq=rowP, ring_layers=ring, ring_pages=2,
-                    rg_layers=rg, rnn_width=4)
+                    rg_layers=rg, rnn_width=4, placement=placement)
     return pool, VBIAllocator(pool, host_swap_pages=swap)
 
 
@@ -121,8 +124,14 @@ def test_refcount_conservation_random_traces(flavor):
     shareable = flavor == "uniform"     # RING/RECURRENT: no prefix sharing
     for seed in range(4 if flavor == "uniform" else 2):
         rng = np.random.default_rng(seed)
+        # odd seeds run the same sweep on a 2-device sharded pool
+        # (DESIGN.md §13): every block carries the placement property,
+        # every gather op records gathered_from, and the offline replay
+        # below re-verifies the placement invariant alongside
+        # conservation
+        placement = ("cpu:0", "cpu:1") if seed % 2 else ()
         pool, al = _mk(n_pages=33, page_size=ps, max_seqs=max_seqs,
-                       rowP=rowP, swap=16, **kinds)
+                       rowP=rowP, swap=16, placement=placement, **kinds)
         # record the whole run so the same invariants can be re-verified
         # purely from the emitted trace afterwards (DESIGN.md §10)
         rec = TraceRecorder(clock=lambda: 0.0)
@@ -556,7 +565,12 @@ def test_raw_page_ops_gated_to_core_vbi():
     schedulers, nowhere else.  And the fault plane (DESIGN.md §12) has
     exactly one door of its own: ``attach_faults`` is reachable only via
     ``serve/faults.py::install_faults``, so no scheduler or bench can
-    grow a private fault-injection hook."""
+    grow a private fault-injection hook.  Placement (DESIGN.md §13) is
+    gated the same way: ``place_block`` and the sharded-pool
+    constructors (``shard_serve_state`` / ``serve_state_specs``) are
+    legal only under ``serve/`` + ``core/vbi/`` (plus their defining
+    module ``distributed/sharding.py``) — device placement is a data
+    property the allocator stamps, not something callers scatter."""
     root = pathlib.Path(__file__).resolve().parent.parent
     # every raw PagedServeState lifecycle op, incl. the RING/RECURRENT aux
     # snapshot/restore pair (DESIGN.md §8)
@@ -572,6 +586,10 @@ def test_raw_page_ops_gated_to_core_vbi():
         r"\.(export_image|import_image|snapshot_image|drop_image)\s*\(")
     # the fault plane's one door (DESIGN.md §12)
     fault_pat = re.compile(r"\.attach_faults\s*\(")
+    # the placement axis (DESIGN.md §13): only the allocator stamps
+    # placement; only serve-side code builds sharded pools
+    place_pat = re.compile(r"\.place_block\s*\(")
+    shard_pat = re.compile(r"\b(shard_serve_state|serve_state_specs)\s*\(")
     bad = []
     for base in ("src/repro", "benchmarks"):
         for p in sorted((root / base).rglob("*.py")):
@@ -585,6 +603,42 @@ def test_raw_page_ops_gated_to_core_vbi():
                         img_pat.search(line)
                         and not rel.startswith("src/repro/serve/")) or (
                         fault_pat.search(line)
-                        and rel != "src/repro/serve/faults.py"):
+                        and rel != "src/repro/serve/faults.py") or (
+                        place_pat.search(line)
+                        and not rel.startswith("src/repro/serve/")) or (
+                        shard_pat.search(line)
+                        and not rel.startswith("src/repro/serve/")
+                        and rel != "src/repro/distributed/sharding.py"):
                     bad.append(f"{rel}:{i}: {line.strip()}")
     assert not bad, "raw page ops outside core/vbi/:\n" + "\n".join(bad)
+
+
+def test_placement_tamper_fails_trace_replay():
+    """The placement invariant is checked from the trace alone (DESIGN.md
+    §13): a gather op (swap_out here) must name only devices the block
+    was actually placed on.  The honest recording passes; the same
+    events with a forged ``gathered_from`` device fail replay."""
+    pool, al = _mk(swap=16, placement=("cpu:0", "cpu:1"))
+    rec = TraceRecorder(clock=lambda: 0.0)
+    al.attach_tracer(rec)
+    blk = al.alloc(0)
+    assert blk.placement == ("cpu:0", "cpu:1")
+    assert blk.props & VBProps.SHARDED
+    _feed(pool, al, blk, 3)
+    assert al.swap_out(blk)
+    al.free(blk)
+    al.attach_tracer(None)
+    check_trace(rec.events)                      # honest replay passes
+
+    forged = [dict(e) for e in rec.events]
+    for e in forged:
+        if e.get("op") == "swap_out":
+            e["gathered_from"] = ["cpu:0", "tpu:9"]
+    with pytest.raises(TraceCheckError, match="never placed"):
+        check_trace(forged)
+
+    # a stripped place event is just as fatal: the gather then names
+    # devices the replay never saw the block placed on
+    stripped = [e for e in rec.events if e.get("op") != "place"]
+    with pytest.raises(TraceCheckError, match="never placed"):
+        check_trace(stripped)
